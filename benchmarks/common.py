@@ -1,0 +1,87 @@
+"""Shared benchmark utilities: the paper's experimental setup, timed runs.
+
+The paper's workload (§4): UCI Image Segmentation (19 attrs / 7 classes),
+classifier with N=31 / 16 leaves / depth 11, dataset of 65 536 records
+(256×256 image), 500 timed iterations.  We reproduce it with the synthetic
+UCI twin + a CART tree constrained into the same geometry class, falling
+back to the deterministic paper-geometry tree when CART lands elsewhere.
+
+Timing conventions mirror the paper:
+  * inner time  — the evaluation call only (records already device-resident),
+    the analogue of the paper's kernel-only time;
+  * outer time  — includes host→device transfer of the record batch and
+    device→host transfer of the class assignments (the paper's full-call
+    time with cudaMemcpy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_segmentation import CONFIG as PAPER
+from repro.core import (
+    CartConfig, breadth_first_encode, eval_serial, paper_tree, train_cart, tree_depth,
+)
+from repro.data.segmentation import make_segmentation, replicated_dataset
+
+
+@dataclasses.dataclass
+class Workload:
+    enc: object          # EncodedTree
+    records: np.ndarray  # (65536, 19) float32
+    labels: np.ndarray
+    depth: int
+    d_mu: float
+
+
+def paper_workload(seed: int = 0, n_records: int | None = None) -> Workload:
+    data = make_segmentation(seed)
+    root = train_cart(
+        data.x_train, data.y_train, PAPER.n_classes,
+        CartConfig(max_depth=12, min_samples_split=8, min_gain=4e-3),
+    )
+    enc = breadth_first_encode(root)
+    if not (15 <= enc.n_nodes <= 63):
+        enc = breadth_first_encode(paper_tree())
+    rec, lab = replicated_dataset(data, n_records or PAPER.dataset_records)
+    from repro.core.analysis import mean_traversal_depth, observed_depths
+
+    d_mu = mean_traversal_depth(observed_depths(enc, rec[:2048]))
+    return Workload(enc=enc, records=rec, labels=lab, depth=tree_depth(enc), d_mu=d_mu)
+
+
+@dataclasses.dataclass
+class Timing:
+    name: str
+    mean_us: float
+    min_us: float
+    max_us: float
+    std_us: float
+    n: int
+
+    def row(self) -> str:
+        return (f"{self.name:32s} {self.mean_us:12.1f} {self.min_us:12.1f} "
+                f"{self.max_us:12.1f} {self.std_us:10.2f}")
+
+
+def time_fn(name: str, fn, *, iters: int = 50, warmup: int = 3) -> Timing:
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        samples.append((time.perf_counter() - t0) * 1e6)
+    a = np.asarray(samples)
+    return Timing(name, float(a.mean()), float(a.min()), float(a.max()),
+                  float(a.std()), iters)
+
+
+def header() -> str:
+    return (f"{'algorithm':32s} {'mean_us':>12s} {'min_us':>12s} "
+            f"{'max_us':>12s} {'std':>10s}")

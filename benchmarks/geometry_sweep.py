@@ -1,0 +1,55 @@
+"""Paper §6 future work: tree-geometry sweep (depth × balance) and record
+distribution (ordered vs random) effects on the two decompositions."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import header, time_fn
+from repro.core import breadth_first_encode, random_tree, tree_depth
+from repro.core.eval_dataparallel import eval_data_parallel
+from repro.core.eval_speculative import eval_speculative
+
+
+def run(iters: int = 15, m: int = 8192):
+    rng = np.random.default_rng(0)
+    rec_random = rng.normal(size=(m, 12)).astype(np.float32)
+    rec_ordered = np.sort(rec_random, axis=0)          # paper: ordered records
+    out = []
+    for depth, balance, tag in [
+        (4, 1.0, "shallow/balanced"),
+        (8, 1.0, "mid/balanced"),
+        (12, 0.45, "deep/straggly"),
+        (16, 0.35, "verydeep/straggly"),
+    ]:
+        enc = breadth_first_encode(
+            random_tree(n_attrs=12, n_classes=7, max_depth=depth, seed=depth, balance=balance)
+        )
+        d = max(tree_depth(enc), 1)
+        args = (jnp.asarray(enc.attr_idx), jnp.asarray(enc.threshold),
+                jnp.asarray(enc.child), jnp.asarray(enc.class_val))
+        sp = jax.jit(lambda r, a=args, d=d: eval_speculative(
+            r, *a, max_depth=d, jumps_per_round=2, use_onehot_matmul=True))
+        dp = jax.jit(lambda r, a=args, d=d: eval_data_parallel(r, *a, max_depth=d))
+        for dist, rr in (("rand", rec_random), ("sort", rec_ordered)):
+            rj = jnp.asarray(rr)
+            out.append(time_fn(f"spec {tag} N={enc.n_nodes} d={d} {dist}",
+                               lambda: jax.block_until_ready(sp(rj)), iters=iters))
+            out.append(time_fn(f"dp   {tag} N={enc.n_nodes} d={d} {dist}",
+                               lambda: jax.block_until_ready(dp(rj)), iters=iters))
+    return out
+
+
+def main():
+    rows = run()
+    print("tree-geometry × record-distribution sweep (µs)")
+    print(header())
+    for t in rows:
+        print(t.row())
+    return rows
+
+
+if __name__ == "__main__":
+    main()

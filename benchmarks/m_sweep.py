@@ -1,0 +1,49 @@
+"""Paper §4.3 m-amortization: records-per-group sweep.
+
+The paper found m=1 ties the two decompositions and m=32 amortizes the
+speculative kernel's static-table loads; here the analogue is the record
+batch per kernel launch — tiny batches pay fixed dispatch overhead, large
+batches amortize it."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import header, paper_workload, time_fn
+from repro.core.eval_speculative import eval_speculative
+from repro.core.eval_dataparallel import eval_data_parallel
+
+
+def run(iters: int = 20):
+    w = paper_workload(n_records=16_384)
+    enc = w.enc
+    depth = max(w.depth, 1)
+    tree_args = (
+        jnp.asarray(enc.attr_idx), jnp.asarray(enc.threshold),
+        jnp.asarray(enc.child), jnp.asarray(enc.class_val),
+    )
+    sp = jax.jit(lambda r: eval_speculative(r, *tree_args, max_depth=depth,
+                                            jumps_per_round=2, use_onehot_matmul=True))
+    dp = jax.jit(lambda r: eval_data_parallel(r, *tree_args, max_depth=depth))
+    out = []
+    for m in (32, 256, 2048, 16_384):
+        rec = jnp.asarray(w.records[:m])
+        ts = time_fn(f"speculative m={m}", lambda: jax.block_until_ready(sp(rec)), iters=iters)
+        td = time_fn(f"data_parallel m={m}", lambda: jax.block_until_ready(dp(rec)), iters=iters)
+        out += [ts, td]
+        out.append(type(ts)(f"  us/record m={m}", ts.mean_us / m, td.mean_us / m, 0, 0, iters))
+    return out
+
+
+def main():
+    rows = run()
+    print("m-amortization sweep (µs; last row pair = per-record costs spec/dp)")
+    print(header())
+    for t in rows:
+        print(t.row())
+    return rows
+
+
+if __name__ == "__main__":
+    main()

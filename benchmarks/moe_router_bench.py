@@ -1,0 +1,56 @@
+"""Beyond-paper benchmark: tree router vs softmax router in the MoE hot path.
+
+The paper's workload transposed to the LM serving stack: per-token expert
+classification.  Compares (a) learned softmax router (matmul + top-k), (b)
+the hardened speculative tree router (Procedure 4/5: one one-hot MXU matmul
++ log2(depth) pointer jumps — no top-k sort on the serving path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import header, time_fn
+from repro.configs.registry import get_smoke_config
+from repro.models.api import build_model
+from repro.models.layers import moe as moel
+
+
+def run(iters: int = 15, tokens: int = 8192):
+    cfg = get_smoke_config("phi3.5-moe-42b-a6.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    lp = jax.tree.map(lambda x: x[0], params["layers"])["moe"]
+    e_pad = lp["wi"].shape[0]
+    x = jax.random.normal(jax.random.key(1), (1, tokens, cfg.d_model), jnp.float32)
+
+    hard = jax.jit(lambda x_: moel.hard_tree_route(lp, x_, cfg=cfg, e_pad=e_pad))
+    soft = jax.jit(lambda x_: jax.lax.top_k(
+        moel.router_probs(lp, x_, cfg=cfg, e_pad=e_pad), cfg.moe.top_k)[1])
+    out = [
+        time_fn("tree_router(speculative)", lambda: jax.block_until_ready(hard(x)), iters=iters),
+        time_fn("soft_router(topk)", lambda: jax.block_until_ready(soft(x)), iters=iters),
+    ]
+    # full layer: serving MoE with hard routing vs soft
+    layer_hard = jax.jit(lambda x_: moel.moe_apply(
+        lp, x_, cfg=cfg, axes=model.axes, serve_hard_tree=True)[0])
+    layer_soft = jax.jit(lambda x_: moel.moe_apply(
+        lp, x_, cfg=cfg, axes=model.axes, serve_hard_tree=False)[0])
+    out.append(time_fn("moe_layer(tree-served)",
+                       lambda: jax.block_until_ready(layer_hard(x)), iters=iters))
+    out.append(time_fn("moe_layer(soft-served)",
+                       lambda: jax.block_until_ready(layer_soft(x)), iters=iters))
+    return out
+
+
+def main():
+    rows = run()
+    print("MoE routing hot path, 8192 tokens (µs)")
+    print(header())
+    for t in rows:
+        print(t.row())
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure + framework benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table1     # one
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+BENCHES = ["table1", "fig4", "analysis", "m_sweep", "geometry", "moe_router"]
+
+
+def _run(name: str) -> None:
+    t0 = time.perf_counter()
+    print(f"\n=== {name} " + "=" * max(1, 66 - len(name)))
+    if name == "table1":
+        from benchmarks.table1_eval_times import main
+        main(iters=10)
+    elif name == "fig4":
+        from benchmarks.fig4_kernel_times import main
+        main(iters=10)
+    elif name == "analysis":
+        from benchmarks.analysis_curves import main
+        main()
+    elif name == "m_sweep":
+        from benchmarks.m_sweep import main
+        main()
+    elif name == "geometry":
+        from benchmarks.geometry_sweep import main
+        main()
+    elif name == "moe_router":
+        from benchmarks.moe_router_bench import main
+        main()
+    else:
+        raise SystemExit(f"unknown bench {name!r}; available: {BENCHES}")
+    print(f"--- {name} done in {time.perf_counter() - t0:.1f}s")
+
+
+def main() -> None:
+    names = sys.argv[1:] or BENCHES
+    for n in names:
+        _run(n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Render the §Roofline markdown table from a dryrun JSON."""
+
+import json
+import sys
+
+
+def main(path, mesh_filter=None):
+    rows = json.load(open(path))
+    out = []
+    hdr = ("| arch | shape | step | mesh | compute s | memory s | collective s "
+           "| dominant | useful | frac | fit GB (TPU) |")
+    out.append(hdr)
+    out.append("|" + "---|" * 11)
+    for r in rows:
+        if "skip" in r:
+            if mesh_filter in (None, "16x16"):
+                out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                           f"SKIP: sub-quadratic only | — | — | — |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ? | {r.get('mesh','?')} "
+                       f"| ERROR | | | | | | |")
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        fit = r.get("fit_bytes_tpu", 0) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['step'].replace('_step','')} | {r['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+            f"| {r['dominant']} | {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {fit:.1f} |"
+        )
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2] if len(sys.argv) > 2 else None)

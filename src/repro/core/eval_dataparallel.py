@@ -1,0 +1,108 @@
+"""Procedure 3: data-parallel tree evaluation in JAX.
+
+One *lane* per record; every lane iterates the branchless descent
+``i = child[i] + (r_a > t)``.  On SIMD hardware the while-loop trip count is
+the *maximum* depth over the vector (lanes that reach a leaf early self-loop
+harmlessly) — exactly the divergence cost the paper attributes to data
+decomposition on CUDA warps.  Two loop flavours are provided:
+
+* ``fixed`` — ``lax.fori_loop`` for ``max_depth`` rounds (static trip count;
+  what a warp effectively pays when any lane walks the deepest path).
+* ``early_exit`` — ``lax.while_loop`` that stops when every record has
+  reached a leaf (models independent processors, paper §3.6's T₃ analysis).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import BOTTOM, EncodedTree
+
+
+def _tree_arrays(enc: EncodedTree):
+    return (
+        jnp.asarray(enc.attr_idx, jnp.int32),
+        jnp.asarray(enc.threshold, jnp.float32),
+        jnp.asarray(enc.child, jnp.int32),
+        jnp.asarray(enc.class_val, jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("max_depth", "loop"))
+def eval_data_parallel(
+    records: jax.Array,
+    attr_idx: jax.Array,
+    threshold: jax.Array,
+    child: jax.Array,
+    class_val: jax.Array,
+    *,
+    max_depth: int,
+    loop: str = "fixed",
+) -> jax.Array:
+    """Procedure 3: one record per lane, branchless descent.
+
+    Args:
+      records: (M, A) float array.
+      attr_idx/threshold/child/class_val: encoded tree fields.
+      max_depth: static bound on tree depth (loop trip count).
+      loop: "fixed" | "early_exit".
+
+    Returns:
+      (M,) int32 class assignments.
+    """
+    m = records.shape[0]
+    idx0 = jnp.zeros((m,), jnp.int32)
+
+    def step(idx):
+        a = attr_idx[idx]  # (M,) gather over nodes
+        t = threshold[idx]
+        v = jnp.take_along_axis(records, a[:, None].astype(jnp.int32), axis=1)[:, 0]
+        return child[idx] + (v > t).astype(jnp.int32)
+
+    if loop == "fixed":
+        idx = jax.lax.fori_loop(0, max_depth, lambda _, i: step(i), idx0)
+    elif loop == "early_exit":
+
+        def cond(idx):
+            return jnp.any(class_val[idx] == BOTTOM)
+
+        idx = jax.lax.while_loop(cond, step, idx0)
+    else:
+        raise ValueError(f"unknown loop mode {loop!r}")
+    return class_val[idx]
+
+
+def eval_data_parallel_tree(enc: EncodedTree, records, *, max_depth: int, loop: str = "fixed"):
+    """Convenience wrapper taking an :class:`EncodedTree`."""
+    a, t, c, k = _tree_arrays(enc)
+    return eval_data_parallel(
+        jnp.asarray(records, jnp.float32), a, t, c, k, max_depth=max_depth, loop=loop
+    )
+
+
+def shard_eval_data_parallel(enc: EncodedTree, records, *, max_depth: int, mesh, axis: str = "data"):
+    """Multi-device data decomposition: records sharded over ``axis``.
+
+    The direct analogue of Procedure 3's ``D[m·p .. m(p+1))`` slicing — pjit
+    moves each shard to its processor; the tree (small) is replicated, exactly
+    like the paper's constant-memory broadcast.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    a, t, c, k = _tree_arrays(enc)
+    rec = jnp.asarray(records, jnp.float32)
+    fn = jax.jit(
+        partial(eval_data_parallel, max_depth=max_depth, loop="fixed"),
+        in_shardings=(
+            NamedSharding(mesh, P(axis, None)),
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, P()),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=NamedSharding(mesh, P(axis)),
+    )
+    return fn(rec, a, t, c, k)

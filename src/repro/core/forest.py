@@ -1,0 +1,85 @@
+"""Random-forest evaluation (Sharp's extension, paper §1) + top-k routing.
+
+Sharp (2008) evaluates forests by concatenating tree encodings into one node
+array and iterating over trees; we keep per-tree encodings stacked into a
+(T, N_pad) batch and ``vmap`` the paper's evaluators over the tree axis — the
+stacked layout is the TPU-native equivalent of texture concatenation.
+
+Forests serve two roles here:
+  1. classic majority-vote classification (the paper's lineage), and
+  2. **top-k expert routing**: a forest of k trees where tree ``j`` emits the
+     j-th expert choice for each token (used by the tree-routed MoE layer).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import EncodedTree, Node, breadth_first_encode, pad_tree, tree_depth
+from repro.core.eval_speculative import eval_speculative
+
+
+class EncodedForest:
+    """T trees padded to a common node count and stacked."""
+
+    def __init__(self, trees: Sequence[EncodedTree]):
+        if not trees:
+            raise ValueError("empty forest")
+        n_pad = max(t.n_nodes for t in trees)
+        padded = [pad_tree(t, n_pad) for t in trees]
+        self.n_trees = len(trees)
+        self.n_nodes = n_pad
+        self.max_depth = max(tree_depth(t) for t in trees)
+        self.attr_idx = np.stack([p.attr_idx for p in padded])  # (T, N)
+        self.threshold = np.stack([p.threshold for p in padded])
+        self.child = np.stack([p.child for p in padded])
+        self.class_val = np.stack([p.class_val for p in padded])
+
+    @classmethod
+    def from_nodes(cls, roots: Sequence[Node]) -> "EncodedForest":
+        return cls([breadth_first_encode(r) for r in roots])
+
+
+def eval_forest(
+    forest: EncodedForest,
+    records,
+    *,
+    jumps_per_round: int = 2,
+    use_onehot_matmul: bool = True,
+) -> jax.Array:
+    """Per-tree class assignments, shape (T, M), via the speculative evaluator."""
+    rec = jnp.asarray(records, jnp.float32)
+
+    def one_tree(a, t, c, k):
+        return eval_speculative(
+            rec,
+            a,
+            t,
+            c,
+            k,
+            max_depth=forest.max_depth,
+            jumps_per_round=jumps_per_round,
+            use_onehot_matmul=use_onehot_matmul,
+        )
+
+    return jax.vmap(one_tree)(
+        jnp.asarray(forest.attr_idx),
+        jnp.asarray(forest.threshold),
+        jnp.asarray(forest.child),
+        jnp.asarray(forest.class_val),
+    )
+
+
+def majority_vote(per_tree: jax.Array, n_classes: int) -> jax.Array:
+    """(T, M) per-tree classes → (M,) majority class."""
+    onehot = jax.nn.one_hot(per_tree, n_classes, dtype=jnp.int32)  # (T, M, C)
+    return jnp.argmax(onehot.sum(axis=0), axis=-1).astype(jnp.int32)
+
+
+def route_topk(per_tree: jax.Array) -> jax.Array:
+    """(k, M) per-tree expert picks → (M, k) routing table (may repeat)."""
+    return per_tree.T

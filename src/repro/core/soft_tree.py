@@ -1,0 +1,147 @@
+"""Soft (differentiable) decision trees that harden to the paper's encoding.
+
+The paper evaluates *fixed* trees trained offline.  To make trees a
+first-class LM-framework feature (tree-routed MoE, tree token heads) we need
+to *learn* them inside a JAX training loop, then serve them with the paper's
+branchless speculative evaluator.  The standard trick (soft decision trees,
+à la Jordan & Jacobs '94 / Frosst & Hinton '17) is used, restricted to the
+paper's tree class:
+
+  * a **perfect binary tree** of depth ``d`` with ``2^d - 1`` internal nodes;
+  * internal node ``n`` tests *one scalar feature* ``z_n`` against threshold
+    ``t_n`` — axis-aligned, exactly the paper's §2.1 tree definition.  For
+    router use, ``z = x @ W`` first projects the hidden state to one feature
+    per internal node, so node ``n`` tests feature ``n`` (attr_idx = node id);
+  * TRAIN: gate ``g_n = σ((z_n - t_n)/τ)``, leaf probability = product of
+    gate terms along the root→leaf path (computed in closed form below);
+  * SERVE: harden — take the sign of ``z_n - t_n`` — and emit an
+    :class:`EncodedTree` evaluated by Procedure 4/5 kernels.
+
+Shapes: depth d, I = 2^d - 1 internal nodes, L = 2^d leaves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import BOTTOM, EncodedTree
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftTreeConfig:
+    depth: int
+    in_features: int          # feature dim of the projection input
+    n_outputs: int            # leaves map onto this many classes/experts
+    temperature: float = 1.0
+    dtype: object = jnp.float32
+
+    @property
+    def n_internal(self) -> int:
+        return 2**self.depth - 1
+
+    @property
+    def n_leaves(self) -> int:
+        return 2**self.depth
+
+
+class SoftTreeParams(NamedTuple):
+    proj: jax.Array       # (in_features, I) — one learned feature per node
+    threshold: jax.Array  # (I,)
+    leaf_map: jax.Array   # (L,) int32 — leaf → output id (static, non-learned)
+
+
+def init_soft_tree(cfg: SoftTreeConfig, key: jax.Array) -> SoftTreeParams:
+    kp, _ = jax.random.split(key)
+    scale = 1.0 / np.sqrt(cfg.in_features)
+    proj = jax.random.normal(kp, (cfg.in_features, cfg.n_internal), cfg.dtype) * scale
+    threshold = jnp.zeros((cfg.n_internal,), cfg.dtype)
+    # leaves cycle over outputs; for n_leaves == n_outputs this is identity.
+    leaf_map = jnp.arange(cfg.n_leaves, dtype=jnp.int32) % cfg.n_outputs
+    return SoftTreeParams(proj, threshold, leaf_map)
+
+
+def _paths(depth: int) -> tuple[np.ndarray, np.ndarray]:
+    """Static (L, d) tables: internal-node index and branch bit along each
+    root→leaf path of a perfect tree in breadth-first numbering.
+
+    BFS numbering of a perfect tree: internal node n has children 2n+1, 2n+2;
+    leaves occupy [I, I+L).  Leaf ℓ's path is read from the bits of ℓ.
+    """
+    n_leaves = 2**depth
+    node_idx = np.zeros((n_leaves, depth), np.int32)
+    branch = np.zeros((n_leaves, depth), np.int32)
+    for leaf in range(n_leaves):
+        n = 0
+        for lvl in range(depth):
+            bit = (leaf >> (depth - 1 - lvl)) & 1
+            node_idx[leaf, lvl] = n
+            branch[leaf, lvl] = bit
+            n = 2 * n + 1 + bit
+    return node_idx, branch
+
+
+def leaf_probs(cfg: SoftTreeConfig, params: SoftTreeParams, x: jax.Array) -> jax.Array:
+    """Soft leaf distribution, shape (..., L).
+
+    ``g_n = σ((z_n - t_n)/τ)`` is the probability of branching *right*
+    (matching the paper's ``r_a > t`` → right predicate); leaf probability is
+    the product over its path — computed as a sum of log-gates for stability.
+    """
+    z = x @ params.proj  # (..., I)
+    logits = (z - params.threshold) / cfg.temperature
+    log_right = jax.nn.log_sigmoid(logits)    # log σ(u)
+    log_left = jax.nn.log_sigmoid(-logits)    # log σ(-u) = log(1-σ(u))
+    node_idx, branch = _paths(cfg.depth)
+    node_idx = jnp.asarray(node_idx)
+    branch = jnp.asarray(branch)
+    lr = log_right[..., node_idx]  # (..., L, d)
+    ll = log_left[..., node_idx]
+    log_p = jnp.where(branch.astype(bool), lr, ll).sum(axis=-1)  # (..., L)
+    return jnp.exp(log_p)
+
+
+def output_probs(cfg: SoftTreeConfig, params: SoftTreeParams, x: jax.Array) -> jax.Array:
+    """Soft output distribution over ``n_outputs`` (sums leaf probs per output)."""
+    lp = leaf_probs(cfg, params, x)  # (..., L)
+    onehot = jax.nn.one_hot(params.leaf_map, cfg.n_outputs, dtype=lp.dtype)  # (L, O)
+    return lp @ onehot
+
+
+def harden(cfg: SoftTreeConfig, params: SoftTreeParams) -> EncodedTree:
+    """Freeze a trained soft tree into the paper's branchless encoding.
+
+    The emitted tree's "records" are the projected features ``z = x @ proj``
+    (A = I attributes, attr_idx[n] = n for internal nodes): apply
+    ``eval_speculative(z, ...)`` or the Pallas kernel to serve it.
+    """
+    depth = cfg.depth
+    n_int, n_leaf = cfg.n_internal, cfg.n_leaves
+    n = n_int + n_leaf
+    attr_idx = np.zeros((n,), np.int32)
+    threshold = np.full((n,), np.inf, np.float32)
+    child = np.arange(n, dtype=np.int32)  # leaves default to self-loop
+    class_val = np.full((n,), BOTTOM, np.int32)
+    thr = np.asarray(jax.device_get(params.threshold), np.float32)
+    lmap = np.asarray(jax.device_get(params.leaf_map), np.int32)
+    for i in range(n_int):
+        attr_idx[i] = i          # node i tests projected feature i
+        threshold[i] = thr[i]
+        child[i] = 2 * i + 1     # perfect-tree BFS: right = left + 1 holds
+    for leaf in range(n_leaf):
+        class_val[n_int + leaf] = lmap[leaf]
+    # BFS numbering of a perfect tree puts all internal nodes before leaves
+    # only level-by-level; with children 2i+1/2i+2 the layout is exactly
+    # breadth-first and leaves occupy [I, I+L): the encoding is valid as-is.
+    return EncodedTree(attr_idx, threshold, child, class_val)
+
+
+def load_balance_loss(leaf_p: jax.Array) -> jax.Array:
+    """Encourage uniform leaf usage (Switch-style aux loss over the batch)."""
+    mean_p = leaf_p.reshape(-1, leaf_p.shape[-1]).mean(axis=0)
+    l = mean_p.shape[-1]
+    return l * jnp.sum(mean_p * mean_p)

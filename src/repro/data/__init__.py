@@ -1,0 +1,4 @@
+from repro.data.pipeline import (
+    DataConfig, SyntheticEncDec, SyntheticLM, SyntheticVLM, pipeline_for,
+)
+from repro.data.segmentation import SegmentationData, make_segmentation, replicated_dataset

@@ -1,0 +1,188 @@
+"""Public jit'd wrappers for the tree-evaluation Pallas kernels.
+
+Handles everything the raw kernels assume away: lane/sublane padding of the
+tree and record arrays, VMEM-budget-driven block-size selection, phantom-node
+padding (the paper's half-warp phantom generalised to 128-lane tiles),
+interpret-mode fallback off-TPU, and unpadding of results.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import EncodedTree, attr_select_matrix, pad_tree, tree_depth
+from repro.kernels.tree_eval import kernel as _k
+
+LANE = 128          # TPU vector lane count / MXU edge
+SUBLANE = 8
+VMEM_BUDGET = 8 * 2**20  # conservative half of a v5e core's ~16 MiB VMEM
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def choose_block_m(n_nodes: int, n_attrs: int, *, jump_mode: str = "gather") -> int:
+    """Pick the record-tile height from a VMEM footprint model.
+
+    Per-tile VMEM ≈ records (BM·A·4) + path copies (≈3·BM·N·4) + tables
+    (A·N·4 + 3·N·4); the onehot jump additionally materialises a
+    (BM, N, N) one-hot → dominate by BM·N²·4.  We take the largest power-of-
+    two BM ≤ 1024 that fits the budget (≥ SUBLANE).
+    """
+    tables = n_attrs * n_nodes * 4 + 3 * n_nodes * 4
+    bm = 1024
+    while bm > SUBLANE:
+        per_tile = bm * n_attrs * 4 + 3 * bm * n_nodes * 4
+        if jump_mode == "onehot":
+            per_tile += bm * n_nodes * n_nodes * 4
+        if tables + per_tile <= VMEM_BUDGET:
+            return bm
+        bm //= 2
+    return SUBLANE
+
+
+class PackedTree:
+    """Device-ready padded tree tables for the kernels."""
+
+    def __init__(self, enc: EncodedTree, n_attrs: int, *, max_depth: int | None = None):
+        self.logical_nodes = enc.n_nodes
+        self.n_attrs = n_attrs
+        self.max_depth = max_depth if max_depth is not None else tree_depth(enc)
+        n_pad = _round_up(enc.n_nodes, LANE)
+        a_pad = _round_up(n_attrs, LANE)
+        penc = pad_tree(enc, n_pad)
+        sel = np.zeros((a_pad, n_pad), np.float32)
+        sel[:n_attrs] = attr_select_matrix(penc, n_attrs)
+        self.n_nodes = n_pad
+        self.n_attrs_padded = a_pad
+        self.attr_select = jnp.asarray(sel)
+        self.attr_idx = jnp.asarray(penc.attr_idx[None, :], jnp.int32)
+        self.threshold = jnp.asarray(penc.threshold[None, :], jnp.float32)
+        self.child = jnp.asarray(penc.child[None, :], jnp.int32)
+        self.class_val = jnp.asarray(penc.class_val[None, :], jnp.int32)
+
+
+def _pad_records(records: jax.Array, block_m: int, a_pad: int) -> tuple[jax.Array, int]:
+    m, a = records.shape
+    m_pad = _round_up(max(m, 1), block_m)
+    out = jnp.zeros((m_pad, a_pad), records.dtype)
+    out = out.at[:m, :a].set(records)
+    return out, m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("algorithm", "block_m", "jump_mode", "jumps", "max_depth", "interpret"),
+)
+def _tree_eval_padded(
+    records,
+    attr_select,
+    attr_idx,
+    threshold,
+    child,
+    class_val,
+    *,
+    algorithm: str,
+    block_m: int,
+    jump_mode: str,
+    jumps: int,
+    max_depth: int,
+    interpret: bool,
+):
+    if algorithm == "speculative":
+        out = _k.speculative_pallas(
+            records,
+            attr_select,
+            threshold,
+            child,
+            class_val,
+            total_jumps=jumps,
+            block_m=block_m,
+            jump_mode=jump_mode,
+            interpret=interpret,
+        )
+    elif algorithm == "data_parallel":
+        out = _k.data_parallel_pallas(
+            records,
+            attr_idx,
+            threshold,
+            child,
+            class_val,
+            max_depth=max_depth,
+            block_m=block_m,
+            interpret=interpret,
+        )
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    return out[:, 0]
+
+
+def tree_eval(
+    records,
+    tree: PackedTree | EncodedTree,
+    *,
+    n_attrs: int | None = None,
+    algorithm: str = "speculative",
+    jump_mode: str = "gather",
+    block_m: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Evaluate a classification tree over a record batch with a TPU kernel.
+
+    Args:
+      records: (M, A) float array (any float dtype; compared in f32).
+      tree: an :class:`EncodedTree` (padded internally) or prebuilt
+        :class:`PackedTree`.
+      algorithm: "speculative" (Procedure 4/5) or "data_parallel" (Procedure 3).
+      jump_mode: "gather" | "onehot" pointer-jump implementation.
+      block_m: records per tile; default = VMEM-model choice.
+      interpret: force Pallas interpret mode; default = auto (True off-TPU).
+
+    Returns:
+      (M,) int32 class assignments.
+    """
+    if isinstance(tree, EncodedTree):
+        if n_attrs is None:
+            n_attrs = int(np.asarray(records).shape[-1])
+        tree = PackedTree(tree, n_attrs)
+    if interpret is None:
+        interpret = not on_tpu()
+    if block_m is None:
+        block_m = choose_block_m(tree.n_nodes, tree.n_attrs_padded, jump_mode=jump_mode)
+    records = jnp.asarray(records)
+    padded, m = _pad_records(records, block_m, tree.n_attrs_padded)
+    jumps = max(1, math.ceil(math.log2(max(tree.max_depth, 2))))
+    out = _tree_eval_padded(
+        padded,
+        tree.attr_select,
+        tree.attr_idx,
+        tree.threshold,
+        tree.child,
+        tree.class_val,
+        algorithm=algorithm,
+        block_m=block_m,
+        jump_mode=jump_mode,
+        jumps=jumps,
+        max_depth=tree.max_depth,
+        interpret=interpret,
+    )
+    return out[:m]
+
+
+def forest_eval(
+    records,
+    trees: list[PackedTree],
+    **kw,
+) -> jax.Array:
+    """Per-tree kernel evaluation, (T, M). Trees may have different sizes."""
+    return jnp.stack([tree_eval(records, t, **kw) for t in trees])

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the tree-evaluation kernels.
+
+The reference semantics for every kernel variant: branchless descent of the
+breadth-first encoded tree, ``max_depth`` rounds (leaves self-loop, so extra
+rounds are no-ops).  Deliberately written with the simplest possible jnp ops —
+no Pallas, no explicit tiling — and used by tests/benchmarks as ground truth.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_eval_ref(
+    records: jax.Array,   # (M, A) float
+    attr_idx: jax.Array,  # (N,) int32
+    threshold: jax.Array, # (N,) float32
+    child: jax.Array,     # (N,) int32
+    class_val: jax.Array, # (N,) int32
+    *,
+    max_depth: int,
+) -> jax.Array:
+    """Ground-truth class assignment, shape (M,) int32."""
+    records = records.astype(jnp.float32)
+    m = records.shape[0]
+    idx = jnp.zeros((m,), jnp.int32)
+    for _ in range(max_depth):
+        a = attr_idx[idx]
+        t = threshold[idx]
+        v = jnp.take_along_axis(records, a[:, None], axis=1)[:, 0]
+        idx = child[idx] + (v > t).astype(jnp.int32)
+    return class_val[idx]
+
+
+def forest_eval_ref(
+    records: jax.Array,    # (M, A)
+    attr_idx: jax.Array,   # (T, N)
+    threshold: jax.Array,  # (T, N)
+    child: jax.Array,      # (T, N)
+    class_val: jax.Array,  # (T, N)
+    *,
+    max_depth: int,
+) -> jax.Array:
+    """Per-tree ground truth, shape (T, M) int32."""
+    def one(a, t, c, k):
+        return tree_eval_ref(records, a, t, c, k, max_depth=max_depth)
+
+    return jax.vmap(one)(attr_idx, threshold, child, class_val)

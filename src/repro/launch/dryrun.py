@@ -1,0 +1,158 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract the roofline terms.
+
+MUST be run as a module entry (``python -m repro.launch.dryrun``) so the
+XLA_FLAGS line above executes before any other jax-touching import.
+
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out results/
+"""
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs.base import ParallelConfig, TrainConfig                # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_config                   # noqa: E402
+from repro.configs.shapes import SHAPES, cells_for                        # noqa: E402
+from repro.launch import roofline as rl                                   # noqa: E402
+from repro.launch.mesh import make_production_mesh                        # noqa: E402
+from repro.launch.specs import dryrun_config, plan_cell                   # noqa: E402
+from repro.parallel import sharding as shd                                # noqa: E402
+from repro.utils.hlo_cost import analyze as hlo_analyze                   # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, verbose: bool = True,
+             parallel: ParallelConfig | None = None, collect_hlo: bool = False,
+             microbatch: int = 0, remat: str | None = None):
+    """Lower + compile one cell; return (RooflineTerms, wall seconds)."""
+    cfg = get_config(arch)
+    lcfg = dryrun_config(cfg)   # f16 stand-in for bf16 (CPU backend, same bytes)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = shd.from_mesh(mesh)
+    chips = mesh.devices.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+
+    if remat is not None:
+        parallel = ParallelConfig(**{**(parallel.__dict__ if parallel else ParallelConfig().__dict__), "remat": remat})
+    plan = plan_cell(lcfg, shape, axes, parallel=parallel,
+                     tcfg=TrainConfig(microbatch=microbatch))
+    t0 = time.perf_counter()
+    with mesh:
+        in_shardings = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s),
+            plan.in_specs,
+            is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec),
+        )
+        jitted = jax.jit(plan.fn, in_shardings=in_shardings,
+                         donate_argnums=plan.donate or ())
+        lowered = jitted.lower(*plan.args)
+        compiled = lowered.compile()
+    wall = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    hc = hlo_analyze(hlo)                     # trip-count-aware (see utils/hlo_cost)
+    cost = {"flops": hc.flops, "bytes accessed": hc.bytes,
+            "xla_flops_once": xla_cost.get("flops", 0.0)}
+
+    mem_stats = {
+        "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_size_in_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "generated_code_size_in_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+    }
+    terms = rl.terms_from_compiled(
+        arch=arch, shape=shape, step=plan.step_name, mesh_name=mesh_name,
+        chips=chips, cost=cost, coll_stats=hc, cfg=cfg, memory_stats=mem_stats,
+    )
+    if verbose:
+        per_dev = (
+            mem_stats["argument_size_in_bytes"] + mem_stats["temp_size_in_bytes"]
+        )
+        print(f"[{arch} × {shape_name} × {mesh_name}] {plan.step_name} "
+              f"compiled in {wall:.1f}s")
+        print(f"  memory_analysis: args={mem_stats['argument_size_in_bytes']/2**30:.2f} GiB  "
+              f"temps={mem_stats['temp_size_in_bytes']/2**30:.2f} GiB  "
+              f"out={mem_stats['output_size_in_bytes']/2**30:.2f} GiB  "
+              f"(per device: {per_dev/2**30:.2f} GiB)")
+        print(f"  cost_analysis: flops/chip={terms.hlo_flops:.3e}  bytes/chip={terms.hlo_bytes:.3e}")
+        print(f"  collectives: {hc.coll_summary()}  (unknown trips: {hc.unknown_trip_counts})")
+        print(f"  roofline: compute={terms.compute_s:.3e}s memory={terms.memory_s:.3e}s "
+              f"collective={terms.collective_s:.3e}s → dominant={terms.dominant} "
+              f"useful={terms.useful_ratio:.2f} frac={terms.roofline_fraction:.3f}")
+    out = terms.row()
+    out["compile_s"] = wall
+    out["mem"] = mem_stats
+    # TPU-donation-adjusted fit: XLA:CPU does not alias donated buffers, so
+    # decode cells double-count the updated KV cache (args copy + output
+    # copy in temps).  On TPU donation aliases them in place.
+    donated = mem_stats["output_size_in_bytes"] if plan.donate else 0
+    out["fit_bytes"] = mem_stats["argument_size_in_bytes"] + mem_stats["temp_size_in_bytes"]
+    out["fit_bytes_tpu"] = max(out["fit_bytes"] - donated, 0)
+    if collect_hlo:
+        out["hlo"] = hlo
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape cell (default: all applicable)")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="all archs × shapes")
+    ap.add_argument("--out", default=None, help="write JSON rows here")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--remat", default=None)
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    parallel = ParallelConfig(seq_shard=not args.no_seq_shard)
+
+    rows, failures = [], []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape, ok, why in cells_for(cfg):
+            if args.shape and shape.name != args.shape:
+                continue
+            if not ok:
+                print(f"[{arch} × {shape.name}] SKIP: {why}")
+                rows.append({"arch": arch, "shape": shape.name, "skip": why})
+                continue
+            for mp in meshes:
+                try:
+                    rows.append(run_cell(arch, shape.name, multi_pod=mp, parallel=parallel,
+                                         microbatch=args.microbatch, remat=args.remat))
+                except Exception as e:  # record and continue: failures are bugs
+                    traceback.print_exc()
+                    failures.append((arch, shape.name, mp, repr(e)))
+                    rows.append({"arch": arch, "shape": shape.name,
+                                 "mesh": "2x16x16" if mp else "16x16", "error": repr(e)})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {len(rows)} rows to {args.out}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f_ in failures:
+            print(" ", f_)
+        sys.exit(1)
+    print(f"\nall {len(rows)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

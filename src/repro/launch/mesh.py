@@ -1,0 +1,28 @@
+"""Production meshes: 16×16 single pod, 2×16×16 multi-pod.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — only ``dryrun.py`` (which sets
+``--xla_force_host_platform_device_count=512`` before any jax import) should
+construct the production shapes in this container.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2, *, n_pod: int = 0):
+    """Small mesh for CPU multi-device tests (requires forced host devices)."""
+    if n_pod:
+        return jax.make_mesh((n_pod, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def single_device_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,191 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape × step).
+
+``input_specs(cfg, shape)`` returns the batch pytree of ShapeDtypeStructs
+matching what the corresponding step function consumes — weak-type-correct,
+shardable, no device allocation.  ``batch_specs`` gives the matching
+PartitionSpec tree (batch dims over ('pod','data') when divisible).
+
+``step_arguments`` assembles the full ``(args, in_specs, out_specs?)`` for the
+dry-run: train steps take (params, opt_state, batch); prefill/decode take
+(params[, cache], batch) with serving params in bf16 (serving frameworks do
+not keep f32 master weights).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig, TrainConfig
+from repro.models.api import build_model
+from repro.optim.adamw import adamw_state_shapes, adamw_state_specs
+from repro.parallel import sharding as shd
+
+
+def _batch_axes_for(axes: shd.MeshAxes, global_batch: int):
+    """Largest prefix of the batch axes that divides the global batch."""
+    return axes.batch_axes_for(global_batch)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch pytree of ShapeDtypeStructs for one cell."""
+    b = shape.global_batch
+    if shape.kind == "decode":
+        s = 1
+    else:
+        s = shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    out: dict[str, Any] = {}
+    if cfg.family == "audio":
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder.n_frames, cfg.d_model), jnp.float32
+        )
+        out["tokens"] = tok
+    elif cfg.embeds_input:
+        out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.float32)
+        out["positions"] = jax.ShapeDtypeStruct((b, 3, s), jnp.int32)
+    else:
+        out["tokens"] = tok
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "decode" and cfg.family == "audio":
+        # decode consumes tokens only; encoder frames live in the cross cache
+        out.pop("embeds", None)
+    return out
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, axes: shd.MeshAxes) -> dict:
+    ba = _batch_axes_for(axes, shape.global_batch)
+    sp = input_specs(cfg, shape)
+
+    def spec_for(k, v):
+        return P(ba, *([None] * (len(v.shape) - 1)))
+
+    return {k: spec_for(k, v) for k, v in sp.items()}
+
+
+@dataclasses.dataclass
+class CellPlan:
+    """Everything the dry-run needs to lower one (arch × shape) cell."""
+
+    step_name: str               # train_step | prefill_step | decode_step
+    fn: Any                      # callable(params, ...) for jax.jit
+    args: tuple                  # ShapeDtypeStructs
+    in_specs: tuple              # PartitionSpecs (pytrees)
+    donate: tuple = ()
+
+
+def serving_config(cfg: ModelConfig) -> ModelConfig:
+    """bf16 weights for serving cells (no f32 master copies at inference)."""
+    return dataclasses.replace(cfg, param_dtype=cfg.dtype)
+
+
+def dryrun_config(cfg: ModelConfig) -> ModelConfig:
+    """bf16→f16 swap for CPU lowering: byte-identical to the TPU target (see
+    configs.base._DTYPES).  Real TPU runs keep bfloat16."""
+    out = cfg
+    if cfg.dtype == "bfloat16":
+        out = dataclasses.replace(out, dtype="float16")
+    if cfg.param_dtype == "bfloat16":
+        out = dataclasses.replace(out, param_dtype="float16")
+    return out
+
+
+TP_MIN_PARAMS = 1e9    # below this, TP shards are tiny and collectives
+                       # dominate: run DP-only (model axis joins batch)
+
+
+def axes_for(cfg: ModelConfig, axes: shd.MeshAxes) -> shd.MeshAxes:
+    """Size-aware parallelism policy (EXPERIMENTS.md §Perf iteration 1)."""
+    if cfg.n_params() < TP_MIN_PARAMS and axes.tp:
+        return dataclasses.replace(
+            axes, tp=False, batch=tuple(axes.batch) + (axes.model,)
+        )
+    return axes
+
+
+def plan_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    axes: shd.MeshAxes,
+    *,
+    parallel: ParallelConfig | None = None,
+    tcfg: TrainConfig | None = None,
+) -> CellPlan:
+    parallel = parallel or ParallelConfig()
+    tcfg = tcfg or TrainConfig()
+    axes = axes_for(cfg, axes)
+    batch = input_specs(cfg, shape)
+    bspecs = batch_pspecs(cfg, shape, axes)
+
+    if shape.kind == "train":
+        model = build_model(cfg, axes, parallel)
+        from repro.train.step import make_train_step
+
+        if tcfg.microbatch == 0:
+            # size-aware gradient accumulation: only the ≥60 B dense archs
+            # (deepseek-67b, qwen2-vl-72b) need accumulation to fit; phi3.5-moe
+            # (42 B total / 6.6 B active) fits at microbatch 1 — and every
+            # extra microbatch re-gathers FSDP weights and re-reduces grads
+            # (§Perf iterations 6-7)
+            n = cfg.n_params()
+            # fit-driven accumulation: deepseek-67b fits at microbatch 2 via
+            # donated-buffer aliasing (14.9 GB); qwen2-vl-72b's wider MLP
+            # (d_ff 29568) needs 4; everything else runs unaccumulated
+            # (§Perf #4/#9)
+            micro = 4 if n >= 70e9 else (2 if n >= 60e9 else 1)
+            tcfg = dataclasses.replace(tcfg, microbatch=micro)
+        step = make_train_step(model, tcfg)
+        pshapes = model.param_shapes()
+        pspecs = model.param_specs()
+        oshapes = adamw_state_shapes(pshapes)
+        ospecs = adamw_state_specs(pspecs, pshapes, axes, zero1=parallel.zero1)
+        return CellPlan(
+            step_name="train_step",
+            fn=step,
+            args=(pshapes, oshapes, batch),
+            in_specs=(pspecs, ospecs, bspecs),
+            donate=(0, 1),
+        )
+
+    scfg = serving_config(cfg)
+    # serving: small archs keep weights TP-sharded only (replicated over the
+    # data axis like a replica set — no per-token FSDP gathers); archs whose
+    # bf16 weights exceed ~6 GB/chip at 16-way TP also shard over 'data'
+    # (serving-FSDP): deepseek-67b and qwen2-vl-72b at 145 GB bf16 cannot
+    # live on 16 chips.
+    per_chip = cfg.n_params() * 2 / axes.model_size
+    saxes = dataclasses.replace(axes, fsdp=None) if per_chip < 6e9 else axes
+    model = build_model(scfg, saxes, parallel)
+    pshapes = model.param_shapes()
+    pspecs = model.param_specs()
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch_):
+            return model.prefill(params, batch_)
+
+        return CellPlan(
+            step_name="prefill_step",
+            fn=prefill_step,
+            args=(pshapes, batch),
+            in_specs=(pspecs, bspecs),
+        )
+
+    # decode: one new token against a seq_len-deep cache
+    cache_shapes = model.cache_shapes(shape.global_batch, shape.seq_len)
+    cache_specs = model.cache_specs(shape.global_batch)
+
+    def serve_step(params, cache, batch_):
+        return model.decode_step(params, cache, batch_)
+
+    return CellPlan(
+        step_name="serve_step",
+        fn=serve_step,
+        args=(pshapes, cache_shapes, batch),
+        in_specs=(pspecs, cache_specs, bspecs),
+        donate=(1,),
+    )

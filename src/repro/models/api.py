@@ -1,0 +1,37 @@
+"""Unified model construction: one factory for every assigned architecture.
+
+All model classes expose the same protocol:
+
+    schema() / param_shapes() / param_specs() / init(key)
+    forward(params, batch) -> (logits, aux)
+    loss(params, batch)    -> (loss, metrics)
+    prefill(params, batch) -> (last_logits, cache)
+    decode_step(params, cache, batch) -> (logits, cache)
+    cache_shapes(batch, max_len) / cache_specs() / init_cache(batch, max_len)
+
+Family dispatch: ``audio`` → :class:`EncDecModel`, ``ssm`` →
+:class:`XLSTMModel`, everything else (dense/moe/hybrid/vlm) →
+:class:`DecoderModel`.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.encdec import EncDecModel
+from repro.models.lm import DecoderModel
+from repro.models.xlstm_lm import XLSTMModel
+from repro.parallel import sharding as shd
+
+
+def build_model(
+    cfg: ModelConfig,
+    axes: shd.MeshAxes | None = None,
+    parallel: ParallelConfig | None = None,
+):
+    axes = axes or shd.single_device_axes()
+    parallel = parallel or ParallelConfig()
+    if cfg.family == "audio":
+        return EncDecModel(cfg, axes, parallel)
+    if cfg.family == "ssm":
+        return XLSTMModel(cfg, axes, parallel)
+    return DecoderModel(cfg, axes, parallel)

@@ -1,0 +1,308 @@
+"""Encoder-decoder model (whisper-medium backbone).
+
+The conv audio frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, n_frames, d_model) — the mel→conv stack is
+outside the lowered graph.  The encoder adds fixed sinusoidal positions and
+runs bidirectional attention; the decoder is causal with cross-attention to
+the encoder output and learned positional embeddings.
+
+Decode caches both the decoder self-attention KV and the per-layer
+cross-attention K/V (computed once from the encoder output at prefill) — the
+standard enc-dec serving layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import schema as sch
+from repro.models.layers import attention as attn
+from repro.models.layers import mlp as mlpl
+from repro.parallel import sharding as shd
+from repro.utils.losses import chunked_softmax_xent, softmax_xent
+
+
+class EncDecCache(NamedTuple):
+    self_kv: attn.KVCache     # (L, B, S_max, KV, hd) decoder self-attn
+    cross_kv: attn.KVCache    # (L, B, F, KV, hd) precomputed encoder K/V
+    pos: jax.Array            # scalar int32
+
+
+def sinusoid_positions(n_pos: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (n_pos, d)."""
+    half = d // 2
+    log_timescale = np.log(10_000.0) / max(half - 1, 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half, dtype=jnp.float32))
+    scaled = jnp.arange(n_pos, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+@dataclasses.dataclass
+class EncDecModel:
+    cfg: ModelConfig
+    axes: shd.MeshAxes
+    parallel: ParallelConfig = ParallelConfig()
+    max_positions: int = 32_768   # learned decoder positions table size
+
+    def __post_init__(self):
+        self.v_pad = shd.pad_vocab(self.cfg.vocab_size, self.axes)
+        assert self.cfg.encoder is not None, "EncDecModel requires cfg.encoder"
+
+    # ----------------------------- schema -----------------------------
+
+    def _enc_layer_schema(self) -> dict:
+        cfg, axes = self.cfg, self.axes
+        return {
+            "ln1": mlpl.rmsnorm_schema(cfg),
+            "attn": attn.attn_schema(cfg, axes),
+            "ln2": mlpl.rmsnorm_schema(cfg),
+            "mlp": mlpl.mlp_schema(cfg, axes),
+        }
+
+    def _dec_layer_schema(self) -> dict:
+        cfg, axes = self.cfg, self.axes
+        return {
+            "ln1": mlpl.rmsnorm_schema(cfg),
+            "attn": attn.attn_schema(cfg, axes),
+            "ln_x": mlpl.rmsnorm_schema(cfg),
+            "cross": attn.attn_schema(cfg, axes, cross=True),
+            "ln2": mlpl.rmsnorm_schema(cfg),
+            "mlp": mlpl.mlp_schema(cfg, axes),
+        }
+
+    def _stack(self, layer: dict, n: int) -> dict:
+        return jax.tree.map(
+            lambda s: sch.PSpec((n, *s.shape), P(None, *s.spec), s.init, s.dtype, s.scale),
+            layer,
+            is_leaf=sch.is_pspec,
+        )
+
+    def schema(self) -> dict:
+        cfg = self.cfg
+        n_enc = cfg.encoder.n_layers
+        return {
+            "embed": {
+                "table": sch.PSpec(
+                    (self.v_pad, cfg.d_model), P(self.axes.tp_axis, None), dtype=cfg.p_dtype
+                )
+            },
+            "pos_embed": sch.PSpec(
+                (self.max_positions, cfg.d_model), P(None, None), dtype=cfg.p_dtype
+            ),
+            "enc_layers": self._stack(self._enc_layer_schema(), n_enc),
+            "enc_norm": mlpl.rmsnorm_schema(cfg),
+            "dec_layers": self._stack(self._dec_layer_schema(), cfg.n_layers),
+            "final_norm": mlpl.rmsnorm_schema(cfg),
+        }
+
+    def param_shapes(self):
+        return sch.shapes_of(self.schema())
+
+    def param_specs(self):
+        return sch.specs_of(self.schema())
+
+    def init(self, key):
+        return sch.init_params(self.schema(), key)
+
+    def _remat(self, fn):
+        if self.parallel.remat == "none":
+            return fn
+        if self.parallel.remat == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            )
+        return jax.checkpoint(fn)
+
+    # ------------------------------ encoder ------------------------------
+
+    def encode(self, params, embeds: jax.Array) -> jax.Array:
+        """(B, F, D) frame embeddings → encoder output (B, F, D)."""
+        cfg, axes = self.cfg, self.axes
+        f = embeds.shape[1]
+        x = embeds.astype(cfg.act_dtype)
+        x = x + sinusoid_positions(f, cfg.d_model).astype(cfg.act_dtype)[None]
+        x = shd.constrain(x, P(axes.batch_axes_for(x.shape[0]), None, None))
+
+        def body(xc, lp):
+            h = mlpl.rmsnorm(lp["ln1"], xc, eps=cfg.norm_eps)
+            a = attn.attention(lp["attn"], h, cfg=cfg, positions=None, causal=False)
+            xc = xc + a
+            h2 = mlpl.rmsnorm(lp["ln2"], xc, eps=cfg.norm_eps)
+            xc = xc + mlpl.mlp(lp["mlp"], h2, cfg=cfg)
+            xc = shd.constrain(xc, P(axes.batch_axes_for(xc.shape[0]), None, None))
+            return xc, None
+
+        body = self._remat(body)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return mlpl.rmsnorm(params["enc_norm"], x, eps=cfg.norm_eps)
+
+    # ------------------------------ decoder ------------------------------
+
+    def _embed_tokens(self, params, tokens, pos_start) -> jax.Array:
+        cfg = self.cfg
+        x = params["embed"]["table"].astype(cfg.act_dtype)[tokens]
+        s = tokens.shape[1]
+        pos = jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"].astype(cfg.act_dtype), pos_start, s, axis=0
+        )
+        return x + pos[None]
+
+    def _dec_layer(self, lp, x, enc_out):
+        cfg, axes = self.cfg, self.axes
+        h = mlpl.rmsnorm(lp["ln1"], x, eps=cfg.norm_eps)
+        q, k, v = attn._project_qkv(lp["attn"], h, None, cfg, None)
+        a = attn.grouped_attention(q, k, v, cfg=cfg, causal=True)
+        x = x + a @ lp["attn"]["wo"].astype(x.dtype)
+        hx = mlpl.rmsnorm(lp["ln_x"], x, eps=cfg.norm_eps)
+        c = attn.attention(lp["cross"], hx, cfg=cfg, positions=None, kv_x=enc_out)
+        x = x + c
+        h2 = mlpl.rmsnorm(lp["ln2"], x, eps=cfg.norm_eps)
+        x = x + mlpl.mlp(lp["mlp"], h2, cfg=cfg)
+        ba = axes.batch_axes_for(x.shape[0])
+        sp = shd.free_model_seq(axes, x.shape[0], x.shape[1]) if self.parallel.seq_shard else None
+        return shd.constrain(x, P(ba, sp, None))
+
+    def _hidden(self, params, batch) -> tuple[jax.Array, jax.Array]:
+        """Final normed decoder hidden (params pre-cast by caller)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["embeds"])
+        x = self._embed_tokens(params, batch["tokens"], 0)
+
+        def body(xc, lp):
+            return self._dec_layer(lp, xc, enc_out), None
+
+        body = self._remat(body)
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        x = mlpl.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+        return x, jnp.zeros((), jnp.float32)
+
+    def forward(self, params, batch) -> tuple[jax.Array, jax.Array]:
+        """Teacher-forced decode over the full target sequence."""
+        params = sch.cast_for_compute(params, self.cfg.act_dtype, self.param_specs())
+        x, aux = self._hidden(params, batch)
+        return self.logits(params, x), aux
+
+    def logits(self, params, x) -> jax.Array:
+        w = params["embed"]["table"].astype(x.dtype).T   # whisper ties embeddings
+        ba = self.axes.batch_axes_for(x.shape[0])
+        return shd.constrain(x @ w, P(ba, None, self.axes.tp_axis))
+
+    def loss(self, params, batch) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        params = sch.cast_for_compute(params, cfg.act_dtype, self.param_specs())
+        x, aux = self._hidden(params, batch)
+        w = params["embed"]["table"].astype(x.dtype).T
+        nll, _ = chunked_softmax_xent(x, w, batch["labels"], vocab_size=cfg.vocab_size)
+        return nll + aux, {"nll": nll, "aux": aux}
+
+    # ------------------------------- decode -------------------------------
+
+    def cache_shapes(self, batch: int, max_len: int) -> EncDecCache:
+        cfg = self.cfg
+        hd = cfg.head_dim_
+        l, f = cfg.n_layers, cfg.encoder.n_frames
+        mk = lambda s_len: jax.ShapeDtypeStruct(
+            (l, batch, s_len, cfg.n_kv_heads, hd), cfg.act_dtype
+        )
+        return EncDecCache(
+            self_kv=attn.KVCache(k=mk(max_len), v=mk(max_len)),
+            cross_kv=attn.KVCache(k=mk(f), v=mk(f)),
+            pos=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+
+    def cache_specs(self, global_batch: int = 0) -> EncDecCache:
+        cfg, axes = self.cfg, self.axes
+        ba = axes.batch_axes_for(global_batch) if global_batch else axes.batch
+        used = set(ba if isinstance(ba, tuple) else ((ba,) if ba else ()))
+        model_free = axes.model not in used
+        msize = axes.model_size
+        kv = axes.model if (model_free and cfg.n_kv_heads % msize == 0
+                            and cfg.n_kv_heads >= msize) else None
+        seq = axes.model if (model_free and kv is None) else None
+        spec = P(None, ba, seq, kv, None)
+        cross_spec = P(None, ba, None, kv, None)
+        return EncDecCache(
+            self_kv=attn.KVCache(k=spec, v=spec),
+            cross_kv=attn.KVCache(k=cross_spec, v=cross_spec),
+            pos=P(),
+        )
+
+    def init_cache(self, batch: int, max_len: int) -> EncDecCache:
+        shapes = self.cache_shapes(batch, max_len)
+        zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        return zeros._replace(pos=jnp.zeros((), jnp.int32))
+
+    def prefill(self, params, batch, max_len: int | None = None) -> tuple[jax.Array, EncDecCache]:
+        """Encode + teacher-forced prompt pass building both caches."""
+        cfg = self.cfg
+        params = sch.cast_for_compute(params, cfg.act_dtype, self.param_specs())
+        enc_out = self.encode(params, batch["embeds"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = self._embed_tokens(params, tokens, 0)
+
+        def body(xc, lp):
+            h = mlpl.rmsnorm(lp["ln1"], xc, eps=cfg.norm_eps)
+            q, k, v = attn._project_qkv(lp["attn"], h, None, cfg, None)
+            a = attn.grouped_attention(q, k, v, cfg=cfg, causal=True)
+            xc = xc + a @ lp["attn"]["wo"].astype(xc.dtype)
+            hx = mlpl.rmsnorm(lp["ln_x"], xc, eps=cfg.norm_eps)
+            cross = attn.cross_cache_from_encoder(lp["cross"], enc_out, cfg)
+            xc = xc + attn.cross_attention_cached(lp["cross"], hx, cross, cfg=cfg)
+            h2 = mlpl.rmsnorm(lp["ln2"], xc, eps=cfg.norm_eps)
+            xc = xc + mlpl.mlp(lp["mlp"], h2, cfg=cfg)
+            ba = self.axes.batch_axes_for(xc.shape[0])
+            sp = (shd.free_model_seq(self.axes, xc.shape[0], xc.shape[1])
+                  if self.parallel.seq_shard else None)
+            xc = shd.constrain(xc, P(ba, sp, None))
+            kv = attn.KVCache(k=k.astype(cfg.act_dtype), v=v.astype(cfg.act_dtype))
+            return xc, (kv, cross)
+
+        x, (self_kv, cross_kv) = jax.lax.scan(body, x, params["dec_layers"])
+        x = mlpl.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+        logits = self.logits(params, x[:, -1:, :])
+        cross_kv = attn.KVCache(
+            k=cross_kv.k.astype(cfg.act_dtype), v=cross_kv.v.astype(cfg.act_dtype)
+        )
+        if max_len is not None and max_len > s:
+            pad = max_len - s
+            self_kv = attn.KVCache(
+                k=jnp.pad(self_kv.k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                v=jnp.pad(self_kv.v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            )
+        return logits, EncDecCache(
+            self_kv=self_kv, cross_kv=cross_kv, pos=jnp.asarray(s, jnp.int32)
+        )
+
+    def decode_step(self, params, cache: EncDecCache, batch) -> tuple[jax.Array, EncDecCache]:
+        """One token per sequence. batch: {"tokens": (B, 1)}."""
+        cfg = self.cfg
+        params = sch.cast_for_compute(params, cfg.act_dtype, self.param_specs())
+        tokens = batch["tokens"]
+        pos = cache.pos
+        x = self._embed_tokens(params, tokens, pos)
+
+        def body(xc, xs):
+            lp, kv_l, cross_l = xs
+            h = mlpl.rmsnorm(lp["ln1"], xc, eps=cfg.norm_eps)
+            a, new_kv = attn.attention_decode(
+                lp["attn"], h, kv_l, pos, cfg=cfg, positions=None
+            )
+            xc = xc + a
+            hx = mlpl.rmsnorm(lp["ln_x"], xc, eps=cfg.norm_eps)
+            xc = xc + attn.cross_attention_cached(lp["cross"], hx, cross_l, cfg=cfg)
+            h2 = mlpl.rmsnorm(lp["ln2"], xc, eps=cfg.norm_eps)
+            xc = xc + mlpl.mlp(lp["mlp"], h2, cfg=cfg)
+            return xc, new_kv
+
+        x, new_kv = jax.lax.scan(body, x, (params["dec_layers"], cache.self_kv, cache.cross_kv))
+        x = mlpl.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+        logits = self.logits(params, x)
+        return logits, EncDecCache(self_kv=new_kv, cross_kv=cache.cross_kv, pos=pos + 1)

@@ -1,0 +1,299 @@
+"""Grouped-query attention with RoPE/M-RoPE, sliding windows, cross-attention
+and KV-cache decode — the shared attention substrate for all assigned archs.
+
+Conventions:
+  * q heads are grouped over kv heads (GQA): q is reshaped to
+    (B, S, KV, G, hd) with G = n_heads // n_kv_heads, and scores are computed
+    with a grouped einsum so the KV tensor is never materialized at H width.
+  * softmax in float32; outputs in the activation dtype.
+  * full-sequence attention is **blockwise** (online-softmax scan over KV
+    chunks, flash-attention style): the (Sq, Sk) score matrix is never
+    materialized, so prefill_32k fits — at 32 768² a dense score tensor is
+    ~17 GB/device, the chunked working set is ~70 MB.  Masks are computed
+    arithmetically per chunk from global positions (no (S, S) mask tensor).
+  * decode (Sq = 1) takes the direct path against the whole cache.
+  * sharding: head dims carry the 'model' axis when divisible; activations
+    are constrained at block edges by the caller.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.rope import apply_mrope, apply_rope
+from repro.models.schema import PSpec
+from repro.parallel import sharding as shd
+
+NEG_INF = -1e30
+DEFAULT_KV_BLOCK = 1024
+
+
+def attn_schema(cfg: ModelConfig, axes: shd.MeshAxes, *, cross: bool = False) -> dict:
+    hd = cfg.head_dim_
+    specs = shd.attn_specs(axes, cfg.n_heads, cfg.n_kv_heads, cfg.d_model, cfg.head_dim_)
+    d = cfg.d_model
+    out = {
+        "wq": PSpec((d, cfg.n_heads * hd), specs["wq"], dtype=cfg.p_dtype),
+        "wk": PSpec((d, cfg.n_kv_heads * hd), specs["wk"], dtype=cfg.p_dtype),
+        "wv": PSpec((d, cfg.n_kv_heads * hd), specs["wv"], dtype=cfg.p_dtype),
+        "wo": PSpec((cfg.n_heads * hd, d), specs["wo"], dtype=cfg.p_dtype),
+    }
+    return out
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # (B, S_max, KV, hd)
+    v: jax.Array   # (B, S_max, KV, hd)
+
+
+def cache_shape(cfg: ModelConfig, batch: int, max_len: int) -> KVCache:
+    hd = cfg.head_dim_
+    s = jax.ShapeDtypeStruct((batch, max_len, cfg.n_kv_heads, hd), cfg.act_dtype)
+    return KVCache(k=s, v=s)
+
+
+def cache_spec(cfg: ModelConfig, axes: shd.MeshAxes, global_batch: int = 0) -> KVCache:
+    """Decode caches are the largest serving state (up to 412 GB at 32 k × 128)
+    and must use every free mesh axis: batch over the divisible batch-axes
+    prefix, then KV heads over 'model' when divisible, else sequence over
+    'model' (SP) — 'model' is free at decode whenever the batch does not
+    extend onto it (b=128 < 256), including for DP-only small archs."""
+    ba = axes.batch_axes_for(global_batch) if global_batch else axes.batch
+    used = set()
+    if ba:
+        used.update(ba if isinstance(ba, tuple) else (ba,))
+    model_free = axes.model not in used
+    msize = axes.model_size
+    kv = axes.model if (model_free and cfg.n_kv_heads % msize == 0
+                        and cfg.n_kv_heads >= msize) else None
+    seq = axes.model if (model_free and kv is None) else None
+    s = P(ba, seq, kv, None)
+    return KVCache(k=s, v=s)
+
+
+def _project_qkv(params, x, kv_x, cfg: ModelConfig, positions, pos_offset=None):
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    src = x if kv_x is None else kv_x
+    sk = src.shape[1]
+    k = (src @ params["wk"].astype(x.dtype)).reshape(b, sk, cfg.n_kv_heads, hd)
+    v = (src @ params["wv"].astype(x.dtype)).reshape(b, sk, cfg.n_kv_heads, hd)
+    if cfg.rope_style == "rope" and positions is not None:
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        if kv_x is None:
+            k = apply_rope(k, positions, theta=cfg.rope_theta)
+    elif cfg.rope_style == "mrope" and positions is not None:
+        q = apply_mrope(q, positions, theta=cfg.rope_theta, sections=tuple(cfg.mrope_sections))
+        if kv_x is None:
+            k = apply_mrope(k, positions, theta=cfg.rope_theta, sections=tuple(cfg.mrope_sections))
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Direct (small / decode) path
+# ---------------------------------------------------------------------------
+
+
+def _grouped_attention(q, k, v, mask, cfg: ModelConfig):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd), mask broadcastable to (B,KV,G,Sq,Sk)."""
+    b, sq, h, hd = q.shape
+    kv = cfg.n_kv_heads
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h * hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (online-softmax) path — the full-sequence default
+# ---------------------------------------------------------------------------
+
+
+def _block_mask(q_pos, k_pos, *, causal, window, is_global):
+    """(Sq, bk) bool validity from global positions.
+
+    causal: key ≤ query.  window > 0 additionally restricts to the last
+    ``window`` positions unless ``is_global`` (a traced scalar bool for
+    hybrid layer stacks) lifts the restriction.
+    """
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        in_win = k_pos[None, :] > q_pos[:, None] - window
+        if is_global is None:
+            m &= in_win
+        else:
+            m &= jnp.logical_or(is_global, in_win)
+    return m
+
+
+def blockwise_attention(
+    q: jax.Array,                     # (B, Sq, H, hd)
+    k: jax.Array,                     # (B, Sk, KV, hd)
+    v: jax.Array,                     # (B, Sk, KV, hd)
+    *,
+    cfg: ModelConfig,
+    causal: bool = True,
+    window: int = 0,
+    is_global=None,                   # traced scalar bool or None
+    q_offset: int = 0,
+    kv_block: int = DEFAULT_KV_BLOCK,
+    unroll: int = 1,
+) -> jax.Array:
+    """Flash-style attention: scan KV chunks with a running (m, l, acc)."""
+    b, sq, h, hd = q.shape
+    kvh = cfg.n_kv_heads
+    g = h // kvh
+    sk = k.shape[1]
+    bk = min(kv_block, sk)
+    while sk % bk:
+        bk //= 2
+    nb = sk // bk
+    scale = hd ** -0.5
+
+    qg = q.reshape(b, sq, kvh, g, hd).astype(jnp.float32)
+    qg = jnp.transpose(qg, (0, 2, 3, 1, 4))                    # (B,KV,G,Sq,hd)
+    ks = jnp.transpose(k.reshape(b, nb, bk, kvh, hd), (1, 0, 2, 3, 4))
+    vs = jnp.transpose(v.reshape(b, nb, bk, kvh, hd), (1, 0, 2, 3, 4))
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        j, kc, vc = xs
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        s = jnp.einsum("bkgqh,btkh->bkgqt", qg, kc) * scale     # (B,KV,G,Sq,bk)
+        k_pos = j * bk + jnp.arange(bk)
+        valid = _block_mask(q_pos, k_pos, causal=causal, window=window, is_global=is_global)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgqt,btkh->bkgqh", p, vc)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (jnp.arange(nb), ks, vs),
+                                  unroll=min(unroll, nb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]                # (B,KV,G,Sq,hd)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, sq, h * hd)
+    return out.astype(q.dtype)
+
+
+def grouped_attention(
+    q, k, v, *, cfg: ModelConfig, causal=True, window=0, is_global=None,
+    q_offset: int = 0, kv_block: int = DEFAULT_KV_BLOCK, unroll: int = 1,
+) -> jax.Array:
+    """Dispatch: blockwise for full sequences, direct for tiny ones."""
+    sq, sk = q.shape[1], k.shape[1]
+    if sq == 1 or sk <= kv_block:
+        if causal:
+            q_pos = q_offset + jnp.arange(sq)
+            k_pos = jnp.arange(sk)
+            mask = _block_mask(q_pos, k_pos, causal=causal, window=window, is_global=is_global)
+            mask = mask[None, None, None]
+        else:
+            mask = None
+        return _grouped_attention(q, k, v, mask, cfg)
+    return blockwise_attention(
+        q, k, v, cfg=cfg, causal=causal, window=window, is_global=is_global,
+        q_offset=q_offset, kv_block=kv_block, unroll=unroll,
+    )
+
+
+def causal_mask(sq: int, sk: int, *, window: int = 0, offset: int = 0):
+    """(Sq, Sk) mask; query i (global position i+offset) sees keys j ≤ i+offset,
+    within ``window`` when sliding.  (Small-sequence/test helper; the model
+    paths use arithmetic per-block masks.)"""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(sk)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= kj > qi - window
+    return m
+
+
+def attention(
+    params: dict,
+    x: jax.Array,                     # (B, S, D)
+    *,
+    cfg: ModelConfig,
+    positions: Optional[jax.Array],
+    causal: bool = True,
+    window: int = 0,
+    is_global=None,
+    kv_x: Optional[jax.Array] = None,  # cross-attention source
+) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    q, k, v = _project_qkv(params, x, kv_x, cfg, positions)
+    caus = causal and kv_x is None
+    out = grouped_attention(
+        q, k, v, cfg=cfg, causal=caus, window=window, is_global=is_global
+    )
+    return out @ params["wo"].astype(x.dtype)
+
+
+def decode_mask(cache_pos, s_max: int, *, window: int = 0, is_global=None):
+    """(Sk,) validity for one decode step against a cache of length s_max."""
+    t = jnp.arange(s_max)
+    valid = t <= cache_pos
+    if window > 0:
+        in_win = t > cache_pos - window
+        valid &= in_win if is_global is None else jnp.logical_or(is_global, in_win)
+    return valid
+
+
+def attention_decode(
+    params: dict,
+    x: jax.Array,                     # (B, 1, D)
+    cache: KVCache,
+    cache_pos: jax.Array,             # scalar int32: index to write
+    *,
+    cfg: ModelConfig,
+    positions: jax.Array,             # (B, 1) or (B, 3, 1) or None
+    window: int = 0,
+    is_global=None,
+) -> tuple[jax.Array, KVCache]:
+    """One decode step against a persistent KV cache."""
+    q, k_new, v_new = _project_qkv(params, x, None, cfg, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), cache_pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), cache_pos, axis=1)
+    valid = decode_mask(cache_pos, k.shape[1], window=window, is_global=is_global)
+    mask = valid[None, None, None, None, :]
+    out = _grouped_attention(q, k, v, mask, cfg)
+    out = out @ params["wo"].astype(x.dtype)
+    return out, KVCache(k=k, v=v)
+
+
+def cross_cache_from_encoder(params, enc_out, cfg: ModelConfig) -> KVCache:
+    """Precompute cross-attention K/V once per request (enc-dec serving)."""
+    b, sk, _ = enc_out.shape
+    hd = cfg.head_dim_
+    k = (enc_out @ params["wk"].astype(enc_out.dtype)).reshape(b, sk, cfg.n_kv_heads, hd)
+    v = (enc_out @ params["wv"].astype(enc_out.dtype)).reshape(b, sk, cfg.n_kv_heads, hd)
+    return KVCache(k=k, v=v)
+
+
+def cross_attention_cached(params, x, cross: KVCache, *, cfg: ModelConfig) -> jax.Array:
+    """Decode-time cross attention against precomputed encoder K/V."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    out = grouped_attention(q, cross.k, cross.v, cfg=cfg, causal=False)
+    return out @ params["wo"].astype(x.dtype)

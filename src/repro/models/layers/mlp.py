@@ -1,0 +1,44 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import PSpec
+from repro.parallel import sharding as shd
+
+
+def mlp_schema(cfg: ModelConfig, axes: shd.MeshAxes, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    specs = shd.mlp_specs(axes, d_ff, cfg.d_model)
+    d = cfg.d_model
+    out = {
+        "wi": PSpec((d, d_ff), specs["wi"], dtype=cfg.p_dtype),
+        "wo": PSpec((d_ff, d), specs["wo"], dtype=cfg.p_dtype),
+    }
+    if cfg.act == "silu":
+        out["wg"] = PSpec((d, d_ff), specs["wg"], dtype=cfg.p_dtype)
+    return out
+
+
+def mlp(params: dict, x: jax.Array, *, cfg: ModelConfig) -> jax.Array:
+    h = x @ params["wi"].astype(x.dtype)
+    if cfg.act == "silu":
+        g = x @ params["wg"].astype(x.dtype)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["wo"].astype(x.dtype)
+
+
+def rmsnorm_schema(cfg: ModelConfig) -> dict:
+    return {"scale": PSpec((cfg.d_model,), init="ones", dtype=jnp.float32)}
+
+
+def rmsnorm(params: dict, x: jax.Array, *, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)

@@ -1,0 +1,68 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., hd) rotated pairwise with cos/sin (..., hd/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(
+    x: jax.Array,            # (B, S, H, hd)
+    positions: jax.Array,    # (B, S) int32
+    *,
+    theta: float,
+) -> jax.Array:
+    hd = x.shape[-1]
+    inv = _freqs(hd, theta)                              # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,            # (B, S, H, hd)
+    positions: jax.Array,    # (B, 3, S) int32: (t, h, w) position streams
+    *,
+    theta: float,
+    sections: tuple,         # frequency-bands per stream; sums to hd/2
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the hd/2 frequency bands are partitioned
+    into (temporal, height, width) sections, each rotated by its own position
+    stream.  For pure-text positions the three streams coincide and M-RoPE
+    reduces to standard RoPE."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = _freqs(hd, theta)                                # (hd/2,)
+    ang_all = positions[..., None].astype(jnp.float32) * inv  # (B, 3, S, hd/2)
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[:, i, :, start : start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def positions_for(
+    batch: int, seq: int, *, style: str, offset=0
+) -> jax.Array:
+    """Default position streams (text-only)."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if style == "mrope":
+        return jnp.broadcast_to(pos[:, None, :], (batch, 3, seq))
+    return pos

@@ -1,0 +1,167 @@
+"""Mamba-style selective SSM block (hymba's parallel-head SSM side).
+
+Training/prefill uses a **chunked associative scan**: the sequence is split
+into fixed chunks; within a chunk the linear recurrence
+``h_t = dA_t ⊙ h_{t-1} + dB_t x_t`` is solved with
+``jax.lax.associative_scan`` (log-depth, TPU-friendly) and the chunk boundary
+state is carried by an outer ``lax.scan``.  The (B, chunk, Di, Ns) working set
+stays VMEM/HBM-bounded while the model dim ``Di`` is sharded over 'model'.
+
+Decode keeps a recurrent state per layer: ``(conv_state (B, W-1, Di),
+ssm_state (B, Di, Ns))`` — O(1) in sequence length, which is what makes the
+hybrid archs eligible for the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import PSpec
+from repro.parallel import sharding as shd
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, W-1, Di)
+    h: jax.Array      # (B, Di, Ns)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, s.state_dim, s.conv_width
+
+
+def ssm_schema(cfg: ModelConfig, axes: shd.MeshAxes) -> dict:
+    d = cfg.d_model
+    d_in, dt_rank, ns, w = _dims(cfg)
+    di = axes.shard_if(d_in)
+    pd = cfg.p_dtype
+    return {
+        "in_proj": PSpec((d, 2 * d_in), P(axes.fsdp_if(d), di), dtype=pd),
+        "conv_w": PSpec((w, d_in), P(None, di), dtype=pd),
+        "conv_b": PSpec((d_in,), P(di), init="zeros", dtype=pd),
+        "x_dtbc": PSpec((d_in, dt_rank + 2 * ns), P(di, None), dtype=pd),
+        "dt_proj": PSpec((dt_rank, d_in), P(None, di), dtype=pd),
+        "dt_bias": PSpec((d_in,), P(di), init="zeros", dtype=pd),
+        "a_log": PSpec((d_in, ns), P(di, None), init="ssm_log_a", dtype=jnp.float32),
+        "d_skip": PSpec((d_in,), P(di), init="ones", dtype=jnp.float32),
+        "out_proj": PSpec((d_in, d), P(di, axes.fsdp_if(d)), dtype=pd),
+    }
+
+
+def ssm_state_shape(cfg: ModelConfig, batch: int) -> SSMState:
+    d_in, _, ns, w = _dims(cfg)
+    return SSMState(
+        conv=jax.ShapeDtypeStruct((batch, w - 1, d_in), cfg.act_dtype),
+        h=jax.ShapeDtypeStruct((batch, d_in, ns), jnp.float32),
+    )
+
+
+def ssm_state_spec(cfg: ModelConfig, axes: shd.MeshAxes, global_batch: int = 0) -> SSMState:
+    d_in, _, _, _ = _dims(cfg)
+    di = axes.shard_if(d_in)
+    ba = axes.batch_axes_for(global_batch) if global_batch else axes.batch
+    return SSMState(conv=P(ba, None, di), h=P(ba, di, None))
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x (B,S,Di), w (W,Di) depthwise causal conv along S."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):  # W is tiny (4): unrolled shifts beat conv lowering
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _dt_b_c(params, x_a, cfg: ModelConfig):
+    d_in, dt_rank, ns, _ = _dims(cfg)
+    dtbc = x_a @ params["x_dtbc"].astype(x_a.dtype)
+    dt_r, bm, cm = jnp.split(dtbc, [dt_rank, dt_rank + ns], axis=-1)
+    dt = jax.nn.softplus(
+        dt_r @ params["dt_proj"].astype(x_a.dtype) + params["dt_bias"].astype(x_a.dtype)
+    )
+    return dt.astype(jnp.float32), bm.astype(jnp.float32), cm.astype(jnp.float32)
+
+
+def ssm_apply(
+    params: dict,
+    x: jax.Array,             # (B, S, D)
+    *,
+    cfg: ModelConfig,
+    axes: shd.MeshAxes,
+    chunk: int = 256,
+) -> jax.Array:
+    """Full-sequence selective scan (train / prefill)."""
+    b, s, _ = x.shape
+    d_in, _, ns, _ = _dims(cfg)
+    xz = x @ params["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_a = jax.nn.silu(
+        _causal_depthwise_conv(x_in, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype))
+    )
+    dt, bm, cm = _dt_b_c(params, x_a, cfg)
+    a = -jnp.exp(params["a_log"])                        # (Di, Ns)
+    x_f = x_a.astype(jnp.float32)
+
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    assert n_chunks * chunk == s, (s, chunk)
+
+    def scan_chunk(h0, args):
+        dt_c, bm_c, cm_c, xa_c = args                    # (B, chunk, ...)
+        da = jnp.exp(dt_c[..., None] * a)                # (B, c, Di, Ns)
+        dbx = (dt_c * xa_c)[..., None] * bm_c[:, :, None, :]
+        da = shd.constrain(da, P(axes.batch_axes_for(da.shape[0]), None, axes.shard_if(da.shape[2]), None))
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        pa, pb = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        h = pb + pa * h0[:, None]                        # fold in carry
+        y = (h * cm_c[:, :, None, :]).sum(-1)            # (B, c, Di)
+        return h[:, -1], y
+
+    reshape = lambda t: t.reshape(b, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+    h0 = jnp.zeros((b, d_in, ns), jnp.float32)
+    _, ys = jax.lax.scan(scan_chunk, h0, (reshape(dt), reshape(bm), reshape(cm), reshape(x_f)))
+    y = ys.swapaxes(0, 1).reshape(b, s, d_in)
+    y = y + params["d_skip"] * x_f
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    return y @ params["out_proj"].astype(x.dtype)
+
+
+def ssm_decode(
+    params: dict,
+    x: jax.Array,             # (B, 1, D)
+    state: SSMState,
+    *,
+    cfg: ModelConfig,
+) -> tuple[jax.Array, SSMState]:
+    """Single-token recurrent step."""
+    b = x.shape[0]
+    d_in, _, ns, w = _dims(cfg)
+    xz = x @ params["in_proj"].astype(x.dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)                  # (B,1,Di)
+    window = jnp.concatenate([state.conv.astype(x.dtype), x_in], axis=1)  # (B,W,Di)
+    conv_out = (window * params["conv_w"].astype(x.dtype)[None]).sum(axis=1, keepdims=True)
+    x_a = jax.nn.silu(conv_out + params["conv_b"].astype(x.dtype))
+    dt, bm, cm = _dt_b_c(params, x_a, cfg)
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt[:, 0, :, None] * a)                  # (B, Di, Ns)
+    dbx = (dt[:, 0] * x_a[:, 0].astype(jnp.float32))[..., None] * bm[:, 0, None, :]
+    h = da * state.h + dbx
+    y = (h * cm[:, 0, None, :]).sum(-1)                  # (B, Di)
+    y = y + params["d_skip"] * x_a[:, 0].astype(jnp.float32)
+    y = (y[:, None].astype(x.dtype) * jax.nn.silu(z))
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, SSMState(conv=window[:, 1:].astype(state.conv.dtype), h=h)

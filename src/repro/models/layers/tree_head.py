@@ -1,0 +1,101 @@
+"""Tree token-classification head — the paper's image-segmentation use case
+transposed to tokens/patches.
+
+A per-token classifier behind an LM/VLM backbone: the hidden state is
+projected to one scalar feature per internal node of a perfect tree; during
+training the head is a soft decision tree (differentiable, cross-entropy over
+leaf-class probabilities); at serving the tree hardens into the paper's
+breadth-first branchless encoding and every token is classified with the
+speculative evaluator (Procedure 4/5) — per-token class assignment, exactly
+the per-pixel segmentation workload of the paper's experiments (qwen2-vl
+patch segmentation, whisper frame tagging).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import soft_tree as st
+from repro.core.eval_speculative import eval_speculative
+from repro.core.tree import BOTTOM
+from repro.models.schema import PSpec
+
+
+def tree_head_depth(n_classes: int) -> int:
+    d = 1
+    while (1 << d) < n_classes:
+        d += 1
+    return d
+
+
+def tree_head_schema(cfg: ModelConfig) -> dict:
+    depth = tree_head_depth(cfg.tree_head_classes)
+    n_internal = (1 << depth) - 1
+    return {
+        "proj": PSpec((cfg.d_model, n_internal), P(None, None), dtype=jnp.float32),
+        "thr": PSpec((n_internal,), P(None), init="zeros", dtype=jnp.float32),
+    }
+
+
+def _tree_cfg(cfg: ModelConfig) -> st.SoftTreeConfig:
+    return st.SoftTreeConfig(
+        depth=tree_head_depth(cfg.tree_head_classes),
+        in_features=cfg.d_model,
+        n_outputs=cfg.tree_head_classes,
+    )
+
+
+def tree_head_probs(params: dict, x: jax.Array, *, cfg: ModelConfig) -> jax.Array:
+    """Soft (training) path: (..., n_classes) class probabilities."""
+    tcfg = _tree_cfg(cfg)
+    tp = st.SoftTreeParams(
+        proj=params["proj"],
+        threshold=params["thr"],
+        leaf_map=jnp.arange(tcfg.n_leaves, dtype=jnp.int32) % cfg.tree_head_classes,
+    )
+    return st.output_probs(tcfg, tp, x.astype(jnp.float32))
+
+
+def tree_head_loss(params: dict, x: jax.Array, labels: jax.Array, *, cfg: ModelConfig) -> jax.Array:
+    """Cross-entropy over the soft tree's class distribution; labels < 0 masked."""
+    probs = tree_head_probs(params, x, cfg=cfg)
+    logp = jnp.log(jnp.clip(probs, 1e-9))
+    gold = jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    valid = (labels >= 0).astype(jnp.float32)
+    return -(gold * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+def tree_head_classify(params: dict, x: jax.Array, *, cfg: ModelConfig) -> jax.Array:
+    """Serving path: harden + speculative branchless evaluation (Procedure 4/5).
+
+    Returns int32 class ids with the leading shape of ``x``.
+    """
+    depth = tree_head_depth(cfg.tree_head_classes)
+    n_int = (1 << depth) - 1
+    n_leaf = 1 << depth
+    n = n_int + n_leaf
+    z = x.astype(jnp.float32) @ params["proj"]          # (..., I)
+    flat = z.reshape(-1, n_int)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_leaf = idx >= n_int
+    attr = jnp.where(is_leaf, 0, idx)
+    thr_full = jnp.concatenate([params["thr"], jnp.zeros((n_leaf,), jnp.float32)])
+    thr = jnp.where(is_leaf, jnp.inf, thr_full[idx])
+    child = jnp.where(is_leaf, idx, 2 * idx + 1)
+    leaf_map = jnp.arange(n_leaf, dtype=jnp.int32) % cfg.tree_head_classes
+    cls_full = jnp.concatenate([jnp.zeros((n_int,), jnp.int32), leaf_map])
+    cls = jnp.where(is_leaf, cls_full[idx], BOTTOM)
+    out = eval_speculative(
+        flat,
+        attr.astype(jnp.int32),
+        thr.astype(jnp.float32),
+        child.astype(jnp.int32),
+        cls.astype(jnp.int32),
+        max_depth=depth,
+        jumps_per_round=2,
+        use_onehot_matmul=True,
+    )
+    return out.reshape(x.shape[:-1])

@@ -1,0 +1,328 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM trains with the **chunkwise-parallel form**: within a chunk the
+stabilized exponential-gating attention-like quadratic form is used; across
+chunks the recurrent matrix state ``(C, n, m)`` is carried by ``lax.scan`` —
+this is the TPU-native equivalent of the TFLA kernels (log-free of sequential
+work inside a chunk, O(S/chunk) sequential steps across).  Decode uses the
+exact recurrent step, so serving state is O(1) in sequence length (the
+long_500k cell).
+
+sLSTM has a true nonlinear recurrence (h_{t-1} feeds the gates), so training
+runs a ``lax.scan`` over time — faithful to the architecture; xlstm-125m is
+small enough that this is the honest cost.
+
+Stabilization follows the xLSTM paper: log-sigmoid forget gates, running
+max-state ``m`` so all exponentials are ≤ 1.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import PSpec
+from repro.parallel import sharding as shd
+
+
+def _mdims(cfg: ModelConfig):
+    d_in = int(cfg.xlstm.proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    return d_in, h, d_in // h
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array     # (B, H, dh, dh)
+    n: jax.Array     # (B, H, dh)
+    m: jax.Array     # (B, H)
+    conv: jax.Array  # (B, W-1, Di)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array     # (B, D)
+    n: jax.Array     # (B, D)
+    h: jax.Array     # (B, D)
+    m: jax.Array     # (B, D)
+
+
+def mlstm_schema(cfg: ModelConfig, axes: shd.MeshAxes) -> dict:
+    d = cfg.d_model
+    d_in, h, dh = _mdims(cfg)
+    w = cfg.xlstm.conv_width
+    di = axes.shard_if(d_in)
+    pd = cfg.p_dtype
+    return {
+        "up": PSpec((d, 2 * d_in), P(axes.fsdp_if(d), di), dtype=pd),
+        "conv_w": PSpec((w, d_in), P(None, di), dtype=pd),
+        "wq": PSpec((d_in, d_in), P(axes.fsdp_if(d_in), di), dtype=pd),
+        "wk": PSpec((d_in, d_in), P(axes.fsdp_if(d_in), di), dtype=pd),
+        "wv": PSpec((d_in, d_in), P(axes.fsdp_if(d_in), di), dtype=pd),
+        "w_if": PSpec((d_in, 2 * h), P(di, None), dtype=jnp.float32),
+        "b_if": PSpec((2 * h,), P(None), init="zeros", dtype=jnp.float32),
+        "down": PSpec((d_in, d), P(di, axes.fsdp_if(d)), dtype=pd),
+    }
+
+
+def slstm_schema(cfg: ModelConfig, axes: shd.MeshAxes) -> dict:
+    d = cfg.d_model
+    dm = axes.shard_if(d)
+    pd = cfg.p_dtype
+    return {
+        "w_gates": PSpec((d, 4 * d), P(axes.fsdp_if(d), axes.shard_if(4 * d)), dtype=pd),   # i,f,z,o
+        "r_gates": PSpec((d, 4 * d), P(axes.fsdp_if(d), axes.shard_if(4 * d)), dtype=pd),   # recurrent
+        "b_gates": PSpec((4 * d,), P(None), init="zeros", dtype=jnp.float32),
+        "out": PSpec((d, d), P(None, dm), dtype=pd),
+    }
+
+
+def mlstm_state_shape(cfg: ModelConfig, batch: int) -> MLSTMState:
+    d_in, h, dh = _mdims(cfg)
+    w = cfg.xlstm.conv_width
+    f32 = jnp.float32
+    return MLSTMState(
+        c=jax.ShapeDtypeStruct((batch, h, dh, dh), f32),
+        n=jax.ShapeDtypeStruct((batch, h, dh), f32),
+        m=jax.ShapeDtypeStruct((batch, h), f32),
+        conv=jax.ShapeDtypeStruct((batch, w - 1, d_in), cfg.act_dtype),
+    )
+
+
+def mlstm_state_spec(cfg: ModelConfig, axes: shd.MeshAxes, global_batch: int = 0) -> MLSTMState:
+    d_in, h, dh = _mdims(cfg)
+    hs = axes.shard_if(h)
+    ds = axes.shard_if(dh) if hs is None else None
+    ba = axes.batch_axes_for(global_batch) if global_batch else axes.batch
+    return MLSTMState(
+        c=P(ba, hs, ds, None),
+        n=P(ba, hs, ds),
+        m=P(ba, hs),
+        conv=P(ba, None, axes.shard_if(d_in)),
+    )
+
+
+def slstm_state_shape(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    s = jax.ShapeDtypeStruct((batch, d), jnp.float32)
+    return SLSTMState(c=s, n=s, h=s, m=s)
+
+
+def slstm_state_spec(cfg: ModelConfig, axes: shd.MeshAxes, global_batch: int = 0) -> SLSTMState:
+    ba = axes.batch_axes_for(global_batch) if global_batch else axes.batch
+    s = P(ba, None)
+    return SLSTMState(c=s, n=s, h=s, m=s)
+
+
+def _conv_causal(x, w):
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    return out
+
+
+def _mlstm_qkv_gates(params, x, cfg: ModelConfig):
+    d_in, h, dh = _mdims(cfg)
+    b, s, _ = x.shape
+    xz = x @ params["up"].astype(x.dtype)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_conv_causal(xm, params["conv_w"].astype(x.dtype)))
+    q = (xc @ params["wq"].astype(x.dtype)).reshape(b, s, h, dh)
+    k = (xc @ params["wk"].astype(x.dtype)).reshape(b, s, h, dh) * (dh ** -0.5)
+    v = (xm @ params["wv"].astype(x.dtype)).reshape(b, s, h, dh)
+    gates = xc.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    ig, fg = jnp.split(gates, 2, axis=-1)                # (B, S, H) logits
+    return q, k, v, ig, fg, z, xm, xc
+
+
+def mlstm_apply(
+    params: dict,
+    x: jax.Array,             # (B, S, D)
+    *,
+    cfg: ModelConfig,
+    axes: shd.MeshAxes,
+    chunk: int = 1024,
+    return_state: bool = False,
+):
+    """Chunkwise-parallel mLSTM over a full sequence.
+
+    With ``return_state`` also returns the terminal :class:`MLSTMState`
+    (the state the chunk scan already carries, plus the conv tail) so a
+    prefill can seed decode without a sequential re-pass."""
+    b, s, d = x.shape
+    d_in, h, dh = _mdims(cfg)
+    q, k, v, ig, fg, z, xm, _ = _mlstm_qkv_gates(params, x, cfg)
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    n_chunks = s // chunk
+    assert n_chunks * chunk == s
+
+    def per_chunk(state, args):
+        c0, n0, m0 = state                               # (B,H,dh,dh),(B,H,dh),(B,H)
+        qc, kc, vc, igc, fgc = args                      # (B, c, H, ...)
+        qf = qc.astype(jnp.float32).transpose(0, 2, 1, 3)   # (B,H,c,dh)
+        kf = kc.astype(jnp.float32).transpose(0, 2, 1, 3)
+        vf = vc.astype(jnp.float32).transpose(0, 2, 1, 3)
+        lf = jax.nn.log_sigmoid(fgc).transpose(0, 2, 1)      # (B,H,c)
+        ii = igc.transpose(0, 2, 1)                          # (B,H,c)
+        bcum = jnp.cumsum(lf, axis=-1)                       # (B,H,c)
+        # intra-chunk log decay matrix D[t,s] = b_t - b_s + i_s  (t ≥ s)
+        dmat = bcum[..., :, None] - bcum[..., None, :] + ii[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(tri, dmat, -jnp.inf)
+        inter_log = bcum + m0[..., None]                     # (B,H,c)
+        m_t = jnp.maximum(inter_log, dmat.max(axis=-1))      # (B,H,c)
+        d_exp = jnp.exp(dmat - m_t[..., None])
+        sc = jnp.einsum("bhtd,bhsd->bhts", qf, kf) * d_exp   # (B,H,c,c)
+        inter_w = jnp.exp(inter_log - m_t)                   # (B,H,c)
+        num = jnp.einsum("bhts,bhsd->bhtd", sc, vf) + inter_w[..., None] * jnp.einsum(
+            "bhtd,bhde->bhte", qf, c0
+        )
+        den = jnp.abs(
+            sc.sum(-1) + inter_w * jnp.einsum("bhtd,bhd->bht", qf, n0)
+        )
+        hout = num / jnp.maximum(den, jnp.exp(-m_t))[..., None]
+        # ---- carry state to chunk end ----
+        btot = bcum[..., -1]                                 # (B,H)
+        scale_s = btot[..., None] - bcum + ii                # (B,H,c): decay for kv_s
+        m_new = jnp.maximum(btot + m0, scale_s.max(-1))
+        w_s = jnp.exp(scale_s - m_new[..., None])            # (B,H,c)
+        c_new = jnp.exp(btot + m0 - m_new)[..., None, None] * c0 + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", w_s, kf, vf
+        )
+        n_new = jnp.exp(btot + m0 - m_new)[..., None] * n0 + jnp.einsum(
+            "bhs,bhsd->bhd", w_s, kf
+        )
+        return (c_new, n_new, m_new), hout.transpose(0, 2, 1, 3)  # (B,c,H,dh)
+
+    resh = lambda t: t.reshape(b, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+    c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    (c_f, n_f, m_f), hs = jax.lax.scan(
+        per_chunk, (c0, n0, m0), (resh(q), resh(k), resh(v), resh(ig), resh(fg))
+    )
+    hout = hs.swapaxes(0, 1).reshape(b, s, d_in).astype(x.dtype)
+    out = (hout * jax.nn.silu(z)) @ params["down"].astype(x.dtype)
+    if return_state:
+        w = cfg.xlstm.conv_width
+        state = MLSTMState(
+            c=c_f, n=n_f, m=m_f, conv=xm[:, -(w - 1):, :].astype(cfg.act_dtype)
+        )
+        return out, state
+    return out
+
+
+def mlstm_decode(
+    params: dict,
+    x: jax.Array,             # (B, 1, D)
+    state: MLSTMState,
+    *,
+    cfg: ModelConfig,
+) -> tuple[jax.Array, MLSTMState]:
+    b = x.shape[0]
+    d_in, h, dh = _mdims(cfg)
+    xz = x @ params["up"].astype(x.dtype)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([state.conv.astype(x.dtype), xm], axis=1)
+    xc = jax.nn.silu((window * params["conv_w"].astype(x.dtype)[None]).sum(1, keepdims=True))
+    q = (xc @ params["wq"].astype(x.dtype)).reshape(b, h, dh).astype(jnp.float32)
+    k = ((xc @ params["wk"].astype(x.dtype)).reshape(b, h, dh) * (dh ** -0.5)).astype(jnp.float32)
+    v = (xm @ params["wv"].astype(x.dtype)).reshape(b, h, dh).astype(jnp.float32)
+    gates = xc[:, 0].astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    ig, fg = jnp.split(gates, 2, axis=-1)                 # (B, H)
+    lf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(lf + state.m, ig)
+    fw = jnp.exp(lf + state.m - m_new)[..., None]
+    iw = jnp.exp(ig - m_new)[..., None]
+    c_new = fw[..., None] * state.c + iw[..., None] * (k[..., :, None] * v[..., None, :])
+    n_new = fw * state.n + iw * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new))
+    hout = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    hout = hout.reshape(b, 1, d_in).astype(x.dtype)
+    out = (hout * jax.nn.silu(z)) @ params["down"].astype(x.dtype)
+    return out, MLSTMState(c=c_new, n=n_new, m=m_new, conv=window[:, 1:].astype(state.conv.dtype))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _slstm_step(params, carry, x_t):
+    """carry: (c, n, h, m) each (B, D); x_t = PRECOMPUTED input gates (B, 4D).
+
+    Two scan hygiene rules learned the hard way (§Perf X1/X2):
+      * weights referenced inside the 4096-step time scan re-gather every
+        iteration (loop-invariant collectives are not hoisted on every XLA
+        pipeline) — ``_slstm_weights`` materializes them replicated, once;
+      * the input-gate matmul ``x_t @ W`` is time-parallel — precomputing it
+        outside the scan turns 4096 tiny matmuls (and their weight-gradient
+        all-reduces inside the backward loop) into ONE large matmul.
+    Only the irreducibly-recurrent ``h_prev @ R`` stays in the loop."""
+    c, n, h_prev, m = carry
+    gates = x_t + h_prev @ params["r_gates"] + params["b_gates"]
+    d = x_t.shape[-1]
+    ig, fg, zg, og = jnp.split(gates, 4, axis=-1)
+    lf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(lf + m, ig)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(ig - m_new)
+    c_new = fw * c + iw * jnp.tanh(zg)
+    n_new = fw * n + iw
+    h_new = jax.nn.sigmoid(og) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def _slstm_weights(params):
+    """Gather-once, replicated f32 gate weights for the time scan."""
+    from jax.sharding import PartitionSpec as P
+
+    return {
+        "w_gates": shd.constrain(params["w_gates"].astype(jnp.float32), P(None, None)),
+        "r_gates": shd.constrain(params["r_gates"].astype(jnp.float32), P(None, None)),
+        "b_gates": params["b_gates"],
+    }
+
+
+def slstm_apply(
+    params: dict,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    axes: shd.MeshAxes,
+    return_state: bool = False,
+):
+    b, s, d = x.shape
+    xf = x.astype(jnp.float32)
+    zero = jnp.zeros((b, d), jnp.float32)
+    carry = (zero, zero, zero, jnp.full((b, d), -1e30, jnp.float32))
+    w = _slstm_weights(params)
+    gx = xf @ w["w_gates"]                   # (B, S, 4D): one big matmul
+
+    def step(carry, gx_t):
+        return _slstm_step(w, carry, gx_t)
+
+    final, hs = jax.lax.scan(step, carry, gx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    out = h @ params["out"].astype(x.dtype)
+    if return_state:
+        return out, SLSTMState(*final)
+    return out
+
+
+def slstm_decode(
+    params: dict, x: jax.Array, state: SLSTMState, *, cfg: ModelConfig
+) -> tuple[jax.Array, SLSTMState]:
+    carry = (state.c, state.n, state.h, state.m)
+    w = _slstm_weights(params)
+    gx = x[:, 0].astype(jnp.float32) @ w["w_gates"]
+    new_carry, h = _slstm_step(w, carry, gx)
+    out = h[:, None].astype(x.dtype) @ params["out"].astype(x.dtype)
+    return out, SLSTMState(*new_carry)

@@ -1,0 +1,416 @@
+"""Decoder-only LM covering the dense / moe / hybrid / vlm families.
+
+One code path lowers every assigned architecture:
+  * params are declared via the schema (shapes/specs/init from one source);
+  * layers are scanned (``lax.scan``) with optionally-rematerialized bodies so
+    deepseek-67b (95L) and qwen2-vl (80L) compile quickly and fit HBM;
+  * per-layer heterogeneity (hymba's global-attention layers among sliding-
+    window layers) rides the scan as a per-layer traced flag consumed by the
+    arithmetic block masks — no unrolling, no (S, S) mask tensors;
+  * full-sequence attention is blockwise (online softmax over KV chunks) so
+    the 32 k cells never materialize quadratic score tensors;
+  * the residual stream is sequence-sharded over the 'model' axis between
+    blocks (sequence parallelism) when the length divides — XLA inserts the
+    gather/scatter collectives at the attention boundary;
+  * decode threads stacked KV caches (and SSM states for hybrid) through the
+    same scan.
+
+Modes: ``forward`` (train/prefill), ``prefill`` (forward + cache build),
+``decode_step`` (one token against the cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import schema as sch
+from repro.models.layers import attention as attn
+from repro.models.layers import mlp as mlpl
+from repro.models.layers import moe as moel
+from repro.models.layers import ssm as ssml
+from repro.models.layers.rope import positions_for
+from repro.parallel import sharding as shd
+from repro.utils.losses import chunked_softmax_xent, softmax_xent
+
+
+class DecodeCache(NamedTuple):
+    kv: attn.KVCache          # stacked (L, B, S_max, KV, hd)
+    ssm: Optional[ssml.SSMState]  # stacked (L, ...) or None
+    pos: jax.Array            # scalar int32: tokens already in cache
+
+
+@dataclasses.dataclass
+class DecoderModel:
+    cfg: ModelConfig
+    axes: shd.MeshAxes
+    parallel: ParallelConfig = ParallelConfig()
+
+    # ----------------------------- schema -----------------------------
+
+    def __post_init__(self):
+        self.v_pad = shd.pad_vocab(self.cfg.vocab_size, self.axes)
+
+    def layer_schema(self) -> dict:
+        cfg, axes = self.cfg, self.axes
+        out = {
+            "ln1": mlpl.rmsnorm_schema(cfg),
+            "attn": attn.attn_schema(cfg, axes),
+            "ln2": mlpl.rmsnorm_schema(cfg),
+        }
+        if cfg.moe is not None:
+            out["moe"] = moel.moe_schema(cfg, axes)
+        else:
+            out["mlp"] = mlpl.mlp_schema(cfg, axes)
+        if cfg.family == "hybrid":
+            out["ssm"] = ssml.ssm_schema(cfg, axes)
+        return out
+
+    def schema(self) -> dict:
+        cfg = self.cfg
+        layer = self.layer_schema()
+        if self.parallel.scan_layers:
+            layers = jax.tree.map(
+                lambda s: sch.PSpec(
+                    (cfg.n_layers, *s.shape), P(None, *s.spec), s.init, s.dtype, s.scale
+                ),
+                layer,
+                is_leaf=sch.is_pspec,
+            )
+        else:
+            layers = {f"layer_{i:03d}": layer for i in range(cfg.n_layers)}
+        d_fsdp = self.axes.fsdp_if(cfg.d_model)
+        out = {
+            "embed": {
+                "table": sch.PSpec(
+                    (self.v_pad, cfg.d_model), P(self.axes.tp_axis, d_fsdp), dtype=cfg.p_dtype
+                )
+            },
+            "layers": layers,
+            "final_norm": mlpl.rmsnorm_schema(cfg),
+        }
+        if not cfg.tie_embeddings:
+            out["lm_head"] = {
+                "w": sch.PSpec(
+                    (cfg.d_model, self.v_pad), P(d_fsdp, self.axes.tp_axis), dtype=cfg.p_dtype
+                )
+            }
+        return out
+
+    def param_shapes(self):
+        return sch.shapes_of(self.schema())
+
+    def param_specs(self):
+        return sch.specs_of(self.schema())
+
+    def init(self, key):
+        return sch.init_params(self.schema(), key)
+
+    # --------------------------- building blocks ---------------------------
+
+    def _constrain_resid(self, x):
+        ba = self.axes.batch_axes_for(x.shape[0])
+        sp = None
+        if self.parallel.seq_shard:
+            sp = shd.free_model_seq(self.axes, x.shape[0], x.shape[1])
+        return shd.constrain(x, P(ba, sp, None))
+
+    def _is_global_flags(self) -> jax.Array:
+        cfg = self.cfg
+        if cfg.sliding_window == 0:
+            return jnp.ones((cfg.n_layers,), bool)
+        flags = [i in set(cfg.global_attn_layers) for i in range(cfg.n_layers)]
+        return jnp.asarray(flags)
+
+    def _layer_apply(self, lp, x, positions, is_global, *, serve_hard_tree=False):
+        """One transformer block (full-sequence). Returns (x, aux)."""
+        cfg, axes = self.cfg, self.axes
+        h = mlpl.rmsnorm(lp["ln1"], x, eps=cfg.norm_eps)
+        q, k, v = attn._project_qkv(lp["attn"], h, None, cfg, positions)
+        a = attn.grouped_attention(
+            q, k, v, cfg=cfg, causal=True,
+            window=cfg.sliding_window, is_global=is_global,
+            kv_block=self.parallel.attn_kv_block, unroll=self.parallel.attn_unroll,
+        )
+        a = a @ lp["attn"]["wo"].astype(x.dtype)
+        if cfg.family == "hybrid":
+            s = ssml.ssm_apply(lp["ssm"], h, cfg=cfg, axes=axes)
+            x = x + 0.5 * (a + s)
+        else:
+            x = x + a
+        h2 = mlpl.rmsnorm(lp["ln2"], x, eps=cfg.norm_eps)
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.moe is not None:
+            y, aux = moel.moe_apply(
+                lp["moe"], h2, cfg=cfg, axes=axes, serve_hard_tree=serve_hard_tree
+            )
+        else:
+            y = mlpl.mlp(lp["mlp"], h2, cfg=cfg)
+        x = x + y
+        x = self._constrain_resid(x)
+        if self.parallel.remat == "offload":
+            from jax.ad_checkpoint import checkpoint_name
+            x = checkpoint_name(x, "resid")
+        return x, aux
+
+    def _remat(self, fn):
+        if self.parallel.remat == "none":
+            return fn
+        if self.parallel.remat == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            )
+        if self.parallel.remat == "offload":
+            # residual stream saves go to host memory (TPU host offload):
+            # ~64 MB/layer/chip of HBM becomes PCIe traffic instead
+            policy = jax.checkpoint_policies.save_and_offload_only_these_names(
+                names_which_can_be_saved=[],
+                names_which_can_be_offloaded=["resid"],
+                offload_src="device", offload_dst="pinned_host",
+            )
+            return jax.checkpoint(fn, policy=policy)
+        return jax.checkpoint(fn)
+
+    # ------------------------------ forward ------------------------------
+
+    def embed(self, params, batch) -> tuple[jax.Array, Any]:
+        cfg, axes = self.cfg, self.axes
+        if cfg.embeds_input:
+            x = batch["embeds"].astype(cfg.act_dtype)
+        else:
+            tok = batch["tokens"]
+            x = params["embed"]["table"].astype(cfg.act_dtype)[tok]
+        x = self._constrain_resid(x)
+        b, s = x.shape[:2]
+        positions = batch.get("positions")
+        if positions is None and cfg.rope_style != "none":
+            positions = positions_for(b, s, style=cfg.rope_style)
+        return x, positions
+
+    def logits(self, params, x) -> jax.Array:
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            w = params["embed"]["table"].astype(x.dtype).T
+        else:
+            w = params["lm_head"]["w"].astype(x.dtype)
+        out = x @ w
+        ba = self.axes.batch_axes_for(x.shape[0])
+        return shd.constrain(out, P(ba, None, self.axes.tp_axis))
+
+    def hidden(self, params, batch, *, serve_hard_tree: bool = False) -> tuple[jax.Array, jax.Array]:
+        """Final normed hidden states (B,S,D) + aux loss (params pre-cast)."""
+        cfg = self.cfg
+        x, positions = self.embed(params, batch)
+        flags = self._is_global_flags()
+
+        if self.parallel.scan_layers:
+
+            def body(carry, xs):
+                xc, aux = carry
+                lp, is_g = xs
+                xc, a = self._layer_apply(lp, xc, positions, is_g, serve_hard_tree=serve_hard_tree)
+                return (xc, aux + a), None
+
+            body = self._remat(body)
+            (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), (params["layers"], flags))
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            for i in range(cfg.n_layers):
+                lp = params["layers"][f"layer_{i:03d}"]
+                x, a = self._layer_apply(lp, x, positions, flags[i], serve_hard_tree=serve_hard_tree)
+                aux = aux + a
+        x = mlpl.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+        return x, aux
+
+    def forward(self, params, batch, *, serve_hard_tree: bool = False) -> tuple[jax.Array, jax.Array]:
+        """Full-sequence forward. Returns (logits (B,S,V_pad), aux_loss)."""
+        params = sch.cast_for_compute(params, self.cfg.act_dtype, self.param_specs())
+        x, aux = self.hidden(params, batch, serve_hard_tree=serve_hard_tree)
+        return self.logits(params, x), aux
+
+    def _out_w(self, params, dtype):
+        if self.cfg.tie_embeddings:
+            return params["embed"]["table"].astype(dtype).T
+        return params["lm_head"]["w"].astype(dtype)
+
+    def loss(self, params, batch) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        params = sch.cast_for_compute(params, cfg.act_dtype, self.param_specs())
+        x, aux = self.hidden(params, batch)
+        nll, _ = chunked_softmax_xent(
+            x, self._out_w(params, x.dtype), batch["labels"], vocab_size=cfg.vocab_size
+        )
+        total = nll + aux
+        return total, {"nll": nll, "aux": aux}
+
+    # ------------------------------- decode -------------------------------
+
+    def cache_shapes(self, batch: int, max_len: int) -> DecodeCache:
+        cfg = self.cfg
+        l = cfg.n_layers
+        kv = attn.cache_shape(cfg, batch, max_len)
+        stack = lambda s: jax.ShapeDtypeStruct((l, *s.shape), s.dtype)
+        kv = attn.KVCache(k=stack(kv.k), v=stack(kv.v))
+        sstate = None
+        if cfg.family == "hybrid":
+            ss = ssml.ssm_state_shape(cfg, batch)
+            sstate = ssml.SSMState(conv=stack(ss.conv), h=stack(ss.h))
+        return DecodeCache(kv=kv, ssm=sstate, pos=jax.ShapeDtypeStruct((), jnp.int32))
+
+    def cache_specs(self, global_batch: int = 0) -> DecodeCache:
+        cfg, axes = self.cfg, self.axes
+        kv = attn.cache_spec(cfg, axes, global_batch)
+        kv = attn.KVCache(k=P(None, *kv.k), v=P(None, *kv.v))
+        sstate = None
+        if cfg.family == "hybrid":
+            ss = ssml.ssm_state_spec(cfg, axes, global_batch)
+            sstate = ssml.SSMState(conv=P(None, *ss.conv), h=P(None, *ss.h))
+        return DecodeCache(kv=kv, ssm=sstate, pos=P())
+
+    def init_cache(self, batch: int, max_len: int) -> DecodeCache:
+        shapes = self.cache_shapes(batch, max_len)
+        zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        return zeros._replace(pos=jnp.zeros((), jnp.int32))
+
+    def _layer_decode(self, lp, x, kv, sstate, cache_pos, positions, is_global):
+        cfg, axes = self.cfg, self.axes
+        h = mlpl.rmsnorm(lp["ln1"], x, eps=cfg.norm_eps)
+        a, new_kv = attn.attention_decode(
+            lp["attn"], h, kv, cache_pos, cfg=cfg, positions=positions,
+            window=cfg.sliding_window, is_global=is_global,
+        )
+        new_s = None
+        if cfg.family == "hybrid":
+            s_out, new_s = ssml.ssm_decode(lp["ssm"], h, sstate, cfg=cfg)
+            x = x + 0.5 * (a + s_out)
+        else:
+            x = x + a
+        h2 = mlpl.rmsnorm(lp["ln2"], x, eps=cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = moel.moe_apply(
+                lp["moe"], h2, cfg=cfg, axes=axes, group_size=h2.shape[0] * h2.shape[1],
+                serve_hard_tree=(cfg.moe.router == "tree"),
+            )
+        else:
+            y = mlpl.mlp(lp["mlp"], h2, cfg=cfg)
+        x = x + y
+        return x, new_kv, new_s
+
+    def decode_step(self, params, cache: DecodeCache, batch) -> tuple[jax.Array, DecodeCache]:
+        """One token for every sequence in the batch. batch: {"tokens": (B,1)}
+        (or {"embeds": (B,1,D)}); positions default to cache.pos."""
+        cfg = self.cfg
+        params = sch.cast_for_compute(params, cfg.act_dtype, self.param_specs())
+        x, _ = self.embed(params, batch)
+        b = x.shape[0]
+        pos = cache.pos
+        if cfg.rope_style == "mrope":
+            positions = jnp.broadcast_to(pos[None, None, None], (b, 3, 1)).astype(jnp.int32)
+        elif cfg.rope_style == "rope":
+            positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+        else:
+            positions = None
+        flags = self._is_global_flags()
+
+        if self.parallel.scan_layers:
+
+            def body(xc, xs):
+                lp, kv_l, ss_l, is_g = xs
+                xc, new_kv, new_ss = self._layer_decode(lp, xc, kv_l, ss_l, pos, positions, is_g)
+                return xc, (new_kv, new_ss)
+
+            dummy_ss = cache.ssm
+            if dummy_ss is None:
+                dummy_ss = jnp.zeros((cfg.n_layers,), jnp.float32)  # placeholder xs
+            x, (new_kv, new_ss) = jax.lax.scan(
+                body, x, (params["layers"], cache.kv, dummy_ss, flags)
+            )
+            if cache.ssm is None:
+                new_ss = None
+        else:
+            kvs, sss = [], []
+            for i in range(cfg.n_layers):
+                lp = params["layers"][f"layer_{i:03d}"]
+                kv_l = jax.tree.map(lambda a: a[i], cache.kv)
+                ss_l = jax.tree.map(lambda a: a[i], cache.ssm) if cache.ssm is not None else None
+                x, nkv, nss = self._layer_decode(lp, x, kv_l, ss_l, pos, positions, flags[i])
+                kvs.append(nkv)
+                sss.append(nss)
+            new_kv = jax.tree.map(lambda *a: jnp.stack(a), *kvs)
+            new_ss = jax.tree.map(lambda *a: jnp.stack(a), *sss) if cache.ssm is not None else None
+        x = mlpl.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+        logits = self.logits(params, x)
+        return logits, DecodeCache(kv=new_kv, ssm=new_ss, pos=pos + 1)
+
+    def prefill(self, params, batch, max_len: int | None = None) -> tuple[jax.Array, DecodeCache]:
+        """Forward + KV-cache construction (prefill_32k serving step).
+
+        ``max_len``: cache capacity; defaults to the prompt length (the
+        dry-run cell convention).  Serving passes prompt+generation budget —
+        decode writes past the prompt would otherwise clamp out of bounds."""
+        cfg = self.cfg
+        params = sch.cast_for_compute(params, cfg.act_dtype, self.param_specs())
+        x, positions = self.embed(params, batch)
+        b, s = x.shape[:2]
+        flags = self._is_global_flags()
+
+        def body(carry, xs):
+            xc = carry
+            lp, is_g = xs
+            h = mlpl.rmsnorm(lp["ln1"], xc, eps=cfg.norm_eps)
+            q, k, v = attn._project_qkv(lp["attn"], h, None, cfg, positions)
+            a = attn.grouped_attention(
+                q, k, v, cfg=cfg, causal=True,
+                window=cfg.sliding_window, is_global=is_g,
+                kv_block=self.parallel.attn_kv_block, unroll=self.parallel.attn_unroll,
+            )
+            a = a @ lp["attn"]["wo"].astype(xc.dtype)
+            new_ss = None
+            if cfg.family == "hybrid":
+                sm = ssml.ssm_apply(lp["ssm"], h, cfg=cfg, axes=self.axes)
+                xc = xc + 0.5 * (a + sm)
+                # terminal SSM state for subsequent decode: recompute cheaply
+                # from the last conv window; hybrid prefill carries state.
+                d_in = cfg.ssm.expand * cfg.d_model
+                w = cfg.ssm.conv_width
+                xz = h @ lp["ssm"]["in_proj"].astype(h.dtype)
+                x_in = xz[..., :d_in]
+                conv_tail = x_in[:, -(w - 1):, :]
+                new_ss = ssml.SSMState(
+                    conv=conv_tail.astype(cfg.act_dtype),
+                    h=jnp.zeros((b, d_in, cfg.ssm.state_dim), jnp.float32),
+                )
+            else:
+                xc = xc + a
+            h2 = mlpl.rmsnorm(lp["ln2"], xc, eps=cfg.norm_eps)
+            if cfg.moe is not None:
+                # serving path: the hardened speculative tree router, matching
+                # decode_step (prefill and decode must route identically)
+                y, _ = moel.moe_apply(
+                    lp["moe"], h2, cfg=cfg, axes=self.axes,
+                    serve_hard_tree=(cfg.moe.router == "tree"),
+                )
+            else:
+                y = mlpl.mlp(lp["mlp"], h2, cfg=cfg)
+            xc = xc + y
+            xc = self._constrain_resid(xc)
+            out = (attn.KVCache(k=k.astype(cfg.act_dtype), v=v.astype(cfg.act_dtype)), new_ss)
+            return xc, out
+
+        x, (kv, ss) = jax.lax.scan(body, x, (params["layers"], flags))
+        x = mlpl.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+        logits = self.logits(params, x[:, -1:, :])
+        if cfg.family != "hybrid":
+            ss = None
+        if max_len is not None and max_len > s:
+            pad = max_len - s
+            kv = attn.KVCache(
+                k=jnp.pad(kv.k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                v=jnp.pad(kv.v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            )
+        return logits, DecodeCache(kv=kv, ssm=ss, pos=jnp.asarray(s, jnp.int32))

@@ -1,0 +1,211 @@
+"""xLSTM language model (sLSTM + mLSTM block stack, xlstm-125m).
+
+Layer ``i`` is an sLSTM block iff ``i % slstm_every == slstm_every - 1``
+(default: every 4th), all others are mLSTM — the 1:3 ratio of the xLSTM
+paper's 125M configuration.  Blocks have heterogeneous parameters, so layers
+are unrolled rather than scanned (12 layers; unrolling is cheap and lets each
+block keep its own schema).
+
+Training uses the chunkwise-parallel mLSTM form and a time-scan for sLSTM
+(see layers/xlstm.py); decode carries O(1) recurrent state per layer, which is
+what qualifies this arch for the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import schema as sch
+from repro.models.layers import mlp as mlpl
+from repro.models.layers import xlstm as xl
+from repro.parallel import sharding as shd
+from repro.utils.losses import chunked_softmax_xent, softmax_xent
+
+
+class XLSTMCache(NamedTuple):
+    states: tuple          # per-layer MLSTMState | SLSTMState
+    pos: jax.Array
+
+
+@dataclasses.dataclass
+class XLSTMModel:
+    cfg: ModelConfig
+    axes: shd.MeshAxes
+    parallel: ParallelConfig = ParallelConfig()
+
+    def __post_init__(self):
+        self.v_pad = shd.pad_vocab(self.cfg.vocab_size, self.axes)
+        assert self.cfg.xlstm is not None
+
+    def is_slstm(self, i: int) -> bool:
+        k = self.cfg.xlstm.slstm_every
+        return k > 0 and i % k == k - 1
+
+    # ----------------------------- schema -----------------------------
+
+    def schema(self) -> dict:
+        cfg, axes = self.cfg, self.axes
+        layers = {}
+        for i in range(cfg.n_layers):
+            body = xl.slstm_schema(cfg, axes) if self.is_slstm(i) else xl.mlstm_schema(cfg, axes)
+            layers[f"layer_{i:03d}"] = {"ln": mlpl.rmsnorm_schema(cfg), "block": body}
+        out = {
+            "embed": {
+                "table": sch.PSpec(
+                    (self.v_pad, cfg.d_model), P(axes.tp_axis, None), dtype=cfg.p_dtype
+                )
+            },
+            "layers": layers,
+            "final_norm": mlpl.rmsnorm_schema(cfg),
+        }
+        if not cfg.tie_embeddings:
+            out["lm_head"] = {
+                "w": sch.PSpec((cfg.d_model, self.v_pad), P(axes.fsdp_if(cfg.d_model), axes.tp_axis), dtype=cfg.p_dtype)
+            }
+        return out
+
+    def param_shapes(self):
+        return sch.shapes_of(self.schema())
+
+    def param_specs(self):
+        return sch.specs_of(self.schema())
+
+    def init(self, key):
+        return sch.init_params(self.schema(), key)
+
+    # ------------------------------ forward ------------------------------
+
+    def _hidden(self, params, batch) -> tuple[jax.Array, jax.Array]:
+        cfg, axes = self.cfg, self.axes
+        tok = batch["tokens"]
+        x = params["embed"]["table"].astype(cfg.act_dtype)[tok]
+        x = shd.constrain(x, P(axes.batch_axes_for(x.shape[0]), None, None))
+        for i in range(cfg.n_layers):
+            lp = params["layers"][f"layer_{i:03d}"]
+
+            def block(lp_, x_, slstm=self.is_slstm(i)):
+                h = mlpl.rmsnorm(lp_["ln"], x_, eps=cfg.norm_eps)
+                if slstm:
+                    y = xl.slstm_apply(lp_["block"], h, cfg=cfg, axes=axes)
+                else:
+                    y = xl.mlstm_apply(lp_["block"], h, cfg=cfg, axes=axes)
+                return shd.constrain(x_ + y, P(axes.batch_axes_for(x_.shape[0]), None, None))
+
+            if self.parallel.remat != "none":
+                block = jax.checkpoint(block)
+            x = block(lp, x)
+        x = mlpl.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+        return x, jnp.zeros((), jnp.float32)
+
+    def forward(self, params, batch) -> tuple[jax.Array, jax.Array]:
+        params = sch.cast_for_compute(params, self.cfg.act_dtype, self.param_specs())
+        x, aux = self._hidden(params, batch)
+        return self.logits(params, x), aux
+
+    def logits(self, params, x) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            w = params["embed"]["table"].astype(x.dtype).T
+        else:
+            w = params["lm_head"]["w"].astype(x.dtype)
+        ba = self.axes.batch_axes_for(x.shape[0])
+        return shd.constrain(x @ w, P(ba, None, self.axes.tp_axis))
+
+    def loss(self, params, batch) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        params = sch.cast_for_compute(params, cfg.act_dtype, self.param_specs())
+        x, aux = self._hidden(params, batch)
+        if cfg.tie_embeddings:
+            w = params["embed"]["table"].astype(x.dtype).T
+        else:
+            w = params["lm_head"]["w"].astype(x.dtype)
+        nll, _ = chunked_softmax_xent(x, w, batch["labels"], vocab_size=cfg.vocab_size)
+        return nll + aux, {"nll": nll, "aux": aux}
+
+    # ------------------------------- decode -------------------------------
+
+    def cache_shapes(self, batch: int, max_len: int) -> XLSTMCache:
+        cfg = self.cfg
+        states = tuple(
+            xl.slstm_state_shape(cfg, batch) if self.is_slstm(i) else xl.mlstm_state_shape(cfg, batch)
+            for i in range(cfg.n_layers)
+        )
+        return XLSTMCache(states=states, pos=jax.ShapeDtypeStruct((), jnp.int32))
+
+    def cache_specs(self, global_batch: int = 0) -> XLSTMCache:
+        cfg, axes = self.cfg, self.axes
+        states = tuple(
+            xl.slstm_state_spec(cfg, axes, global_batch) if self.is_slstm(i)
+            else xl.mlstm_state_spec(cfg, axes, global_batch)
+            for i in range(cfg.n_layers)
+        )
+        return XLSTMCache(states=states, pos=P())
+
+    def init_cache(self, batch: int, max_len: int) -> XLSTMCache:
+        shapes = self.cache_shapes(batch, max_len)
+
+        def zero(s):
+            z = jnp.zeros(s.shape, s.dtype)
+            return z
+
+        states = jax.tree.map(zero, shapes.states)
+        # m-stabilizers start at -inf-ish
+        fixed = []
+        for i, st in enumerate(states):
+            if self.is_slstm(i):
+                fixed.append(st._replace(m=jnp.full_like(st.m, -1e30)))
+            else:
+                fixed.append(st._replace(m=jnp.full_like(st.m, -1e30)))
+        return XLSTMCache(states=tuple(fixed), pos=jnp.zeros((), jnp.int32))
+
+    def decode_step(self, params, cache: XLSTMCache, batch) -> tuple[jax.Array, XLSTMCache]:
+        cfg = self.cfg
+        params = sch.cast_for_compute(params, cfg.act_dtype, self.param_specs())
+        tok = batch["tokens"]
+        x = params["embed"]["table"].astype(cfg.act_dtype)[tok]  # (B, 1, D)
+        new_states = []
+        for i in range(cfg.n_layers):
+            lp = params["layers"][f"layer_{i:03d}"]
+            h = mlpl.rmsnorm(lp["ln"], x, eps=cfg.norm_eps)
+            if self.is_slstm(i):
+                y, ns = xl.slstm_decode(lp["block"], h, cache.states[i], cfg=cfg)
+            else:
+                y, ns = xl.mlstm_decode(lp["block"], h, cache.states[i], cfg=cfg)
+            x = x + y
+            new_states.append(ns)
+        x = mlpl.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+        return self.logits(params, x), XLSTMCache(states=tuple(new_states), pos=cache.pos + 1)
+
+    def prefill(self, params, batch, max_len: int | None = None) -> tuple[jax.Array, XLSTMCache]:
+        """Single parallel pass producing both logits and terminal states.
+
+        The chunkwise-parallel mLSTM scan and the sLSTM time scan already
+        carry the recurrent state — ``return_state`` surfaces it, so prefill
+        costs exactly one forward (no sequential re-pass).
+        """
+        cfg, axes = self.cfg, self.axes
+        params = sch.cast_for_compute(params, cfg.act_dtype, self.param_specs())
+        tok = batch["tokens"]
+        x = params["embed"]["table"].astype(cfg.act_dtype)[tok]
+        x = shd.constrain(x, P(axes.batch_axes_for(x.shape[0]), None, None))
+        states = []
+        for i in range(cfg.n_layers):
+            lp = params["layers"][f"layer_{i:03d}"]
+            h = mlpl.rmsnorm(lp["ln"], x, eps=cfg.norm_eps)
+            if self.is_slstm(i):
+                y, st = xl.slstm_apply(lp["block"], h, cfg=cfg, axes=axes, return_state=True)
+            else:
+                y, st = xl.mlstm_apply(lp["block"], h, cfg=cfg, axes=axes, return_state=True)
+            x = x + y
+            x = shd.constrain(x, P(axes.batch_axes_for(x.shape[0]), None, None))
+            states.append(st)
+        x = mlpl.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+        logits = self.logits(params, x[:, -1:, :])
+        return logits, XLSTMCache(
+            states=tuple(states), pos=jnp.asarray(tok.shape[1], jnp.int32)
+        )

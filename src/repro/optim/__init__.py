@@ -1,0 +1,4 @@
+from repro.optim.adamw import (
+    AdamWState, adamw_apply, adamw_init, adamw_state_shapes, adamw_state_specs,
+    clip_by_global_norm, global_norm, lr_at,
+)

@@ -1,0 +1,101 @@
+"""Cross-pod gradient compression: int8 quantized all-reduce + error feedback.
+
+On a multi-pod mesh the 'pod' axis rides the slow DCN links; compressing the
+cross-pod gradient reduction 4× (f32 → int8 on the wire) cuts the dominant
+inter-pod collective term.  Scheme (1-bit-Adam-family, per-tensor scale):
+
+  1. residual-corrected gradient  g' = g + e   (error feedback state e)
+  2. per-tensor scale  s = max|g'| / 127, shared via a tiny f32 pmax
+  3. q = round(g'/s) ∈ int8;  wire all-reduce in int16 (Σ over ≤ 256 pods
+     of int8 fits int16), then dequantize with the shared scale
+  4. e ← g' − dequant(q)  (local quantization error carried to next step)
+
+The quantized reduction happens inside ``shard_map`` over the 'pod' axis only;
+the intra-pod (data-axis) reduction stays f32 and is produced by the usual
+pjit gradient psum.  With error feedback the compressed SGD/Adam trajectory
+converges to the uncompressed one (Karimireddy et al. 2019).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize(g: jax.Array, scale: jax.Array) -> jax.Array:
+    q = jnp.round(g / jnp.maximum(scale, 1e-20))
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _compressed_reduce_leaf(g, e, axis_name: str, n_pods: int):
+    """int8-wire mean-reduction of one gradient leaf over ``axis_name``."""
+    gf = g.astype(jnp.float32) + e
+    scale = jnp.max(jnp.abs(gf)) / 127.0
+    scale = jax.lax.pmax(scale, axis_name)          # shared scale (1 f32 on wire)
+    q = quantize(gf, scale)
+    total = jax.lax.psum(q.astype(jnp.int16), axis_name)  # int16 wire format
+    mean = dequantize(total, scale) / n_pods
+    new_e = gf - dequantize(q, scale)               # local quantization error
+    return mean.astype(g.dtype), new_e
+
+
+def compressed_psum_tree(grads, err, *, axis_name: str, n_pods: int):
+    return jax.tree.map(
+        lambda g, e: _compressed_reduce_leaf(g, e, axis_name, n_pods), grads, err
+    )
+
+
+def init_error_feedback(param_shapes):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), param_shapes)
+
+
+def error_feedback_shapes(param_shapes):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), param_shapes
+    )
+
+
+def cross_pod_compressed_mean(mesh, grads, err, specs):
+    """Apply the compressed cross-pod reduction to a full gradient pytree.
+
+    ``grads`` must already be reduced over the intra-pod axes (the usual pjit
+    data-parallel mean) and replicated over 'pod'... — in the pjit flow we
+    instead arrange the loss to mean over ('data',) only and do the pod-axis
+    reduction here explicitly with shard_map.  Returns (mean_grads, new_err).
+    """
+    from jax import shard_map
+
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+    if n_pods == 1:
+        return grads, err
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+
+    def body(*args):
+        k = len(args) // 2
+        gs, es = args[:k], args[k:]
+        outs = [_compressed_reduce_leaf(g, e, "pod", n_pods) for g, e in zip(gs, es)]
+        return tuple(o[0] for o in outs) + tuple(o[1] for o in outs)
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=tuple(flat_s) + tuple(flat_s),
+        out_specs=tuple(flat_s) + tuple(flat_s),
+        check_vma=False,
+    )
+    outs = fn(*flat_g, *flat_e)
+    k = len(flat_g)
+    new_g = jax.tree.unflatten(tdef, outs[:k])
+    new_e = jax.tree.unflatten(tdef, outs[k:])
+    return new_g, new_e

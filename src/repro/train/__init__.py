@@ -1,0 +1,4 @@
+from repro.train.step import make_eval_step, make_loss_fn, make_train_step
+from repro.train.loop import (
+    LoopReport, LoopState, SimulatedFailure, StragglerWatchdog, resize_mesh, train_loop,
+)

@@ -1,0 +1,83 @@
+"""Train-step construction: value_and_grad → (optional) compressed cross-pod
+reduction → AdamW, with optional microbatch gradient accumulation.
+
+The returned function is pure and jit/pjit-friendly:
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+Microbatching reshapes the global batch (B, S) → (k, B/k, S) and accumulates
+gradients with a ``lax.scan`` (one live microbatch of activations at a time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.optim.adamw import AdamWState, adamw_apply, adamw_init
+
+
+def make_loss_fn(model):
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    return loss_fn
+
+
+def make_train_step(
+    model,
+    tcfg: TrainConfig,
+    *,
+    donate: bool = True,
+) -> Callable:
+    """Build the canonical train step for a model object."""
+    loss_fn = make_loss_fn(model)
+
+    def compute_grads(params, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            k = tcfg.microbatch
+
+            def split(x):
+                b = x.shape[0]
+                assert b % k == 0, (b, k)
+                return x.reshape(k, b // k, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g, loss), _ = jax.lax.scan(acc, (g0, jnp.zeros((), jnp.float32)), micro)
+            g = jax.tree.map(lambda x: x / k, g)
+            return loss / k, {}, g
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, aux, g
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, aux, grads = compute_grads(params, batch)
+        new_params, new_state, stats = adamw_apply(params, grads, opt_state, tcfg)
+        metrics = {"loss": loss, **stats}
+        if isinstance(aux, dict):
+            metrics.update({k: v for k, v in aux.items()})
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model) -> Callable:
+    loss_fn = make_loss_fn(model)
+
+    def eval_step(params, batch):
+        loss, aux = loss_fn(params, batch)
+        return {"loss": loss, **(aux if isinstance(aux, dict) else {})}
+
+    return eval_step

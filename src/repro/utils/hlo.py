@@ -1,0 +1,121 @@
+"""HLO text analysis: collective-bytes accounting for the roofline.
+
+``cost_analysis()`` reports FLOPs and memory bytes but not collective
+traffic, so we parse the (post-SPMD-partitioning) compiled HLO and sum the
+operand bytes of every communication op:
+
+    all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+
+Bytes are counted from the op's *output* shape for all-gather (the gathered
+bytes cross the wire), *operand* shape for all-reduce / reduce-scatter /
+all-to-all / collective-permute — a per-chip, per-step wire-byte estimate
+matching the roofline's ``collective_bytes / (chips × link_bw)`` convention.
+Ring-algorithm constant factors (2(n-1)/n etc.) are folded into the
+effective link bandwidth constant, as is standard in roofline practice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g. "bf16[16,4096,512]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z]*\d*(?:e\d+m\d+(?:fn)?)?)\[([0-9,]*)\]")
+
+_COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _first_shapes(text: str):
+    """All dtype[shape] groups appearing in one HLO instruction line."""
+    return [(m.group(1), m.group(2)) for m in _SHAPE_RE.finditer(text)]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}: {self.count_by_kind[k]} ops, {self.bytes_by_kind[k]/2**20:.1f} MiB"
+            for k in sorted(self.bytes_by_kind)
+        ]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum wire bytes of every collective op in compiled HLO text."""
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # instruction lines look like:  "%name = TYPE[SHAPE] kind(...), ..."
+        if "=" not in ls:
+            continue
+        rhs = ls.split("=", 1)[1]
+        m = re.search(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start|-done)?\b", rhs)
+        if not m:
+            continue
+        kind, phase = m.group(1), m.group(2)
+        if phase == "-done":
+            continue  # avoid double counting start/done pairs
+        shapes = _first_shapes(rhs)
+        if not shapes:
+            continue
+        # first shape group on the RHS = the op's result shape (tuple results
+        # list every element; sum them for all-to-all tuples)
+        if kind == "all-gather":
+            total = _shape_bytes(*shapes[0])
+        elif kind in ("reduce-scatter",):
+            # result is the scattered shard; wire bytes ≈ operand = result × n;
+            # count operand (appears after the op name) when present
+            total = _shape_bytes(*shapes[0])
+            ops = shapes[1:]
+            if ops:
+                total = max(total, max(_shape_bytes(*s) for s in ops))
+        else:
+            # all-reduce/all-to-all/collective-permute: result size = operand size
+            total = _shape_bytes(*shapes[0])
+        bytes_by[kind] += total
+        count_by[kind] += 1
+    return CollectiveStats(bytes_by_kind=dict(bytes_by), count_by_kind=dict(count_by))
+
+
+def op_histogram(hlo_text: str, top: int = 20) -> list[tuple[str, int]]:
+    """Instruction-kind frequency (debug aid for the perf loop)."""
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        rhs = ls.split("=", 1)[1].strip()
+        m = re.search(r"\b([a-z][a-z0-9-]*)\(", rhs)
+        if m:
+            counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

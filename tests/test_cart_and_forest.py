@@ -1,0 +1,194 @@
+"""CART trainer, forests, soft trees, and the §3.6 analysis models."""
+
+import math
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    CartConfig,
+    EncodedForest,
+    SoftTreeConfig,
+    accuracy,
+    analysis,
+    breadth_first_encode,
+    eval_forest,
+    eval_serial,
+    harden,
+    init_soft_tree,
+    leaf_probs,
+    load_balance_loss,
+    majority_vote,
+    output_probs,
+    route_topk,
+    train_cart,
+    tree_depth,
+    validate_encoding,
+)
+from repro.core.eval_speculative import eval_speculative
+from repro.data.segmentation import make_segmentation, replicated_dataset
+
+
+class TestCart:
+    def test_separable_data_trains_to_high_accuracy(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(800, 10))
+        y = ((x[:, 2] > 0.3).astype(int) * 2 + (x[:, 7] > -0.5).astype(int))
+        root = train_cart(x, y, 4)
+        enc = breadth_first_encode(root)
+        validate_encoding(enc)
+        assert accuracy(eval_serial(enc, x.astype(np.float32)), y) > 0.97
+
+    def test_depth_limit_respected(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(500, 5))
+        y = rng.integers(0, 4, size=500)
+        root = train_cart(x, y, 4, CartConfig(max_depth=3))
+        assert root.depth() <= 3
+
+    def test_segmentation_twin_matches_paper_cardinalities(self):
+        data = make_segmentation(seed=0)
+        assert data.x_train.shape == (2310, 19)
+        assert data.x_test.shape == (2099, 19)
+        assert set(np.unique(data.y_train)) <= set(range(7))
+        xr, yr = replicated_dataset(data)
+        assert xr.shape == (65_536, 19)
+
+    def test_segmentation_tree_geometry_class(self):
+        """Trained tree lands in the paper's geometry class (N≈31, depth≈11)."""
+        data = make_segmentation(seed=0)
+        root = train_cart(
+            data.x_train, data.y_train, 7,
+            CartConfig(max_depth=12, min_samples_split=8, min_gain=4e-3),
+        )
+        enc = breadth_first_encode(root)
+        validate_encoding(enc)
+        assert 15 <= enc.n_nodes <= 127
+        assert 4 <= tree_depth(enc) <= 12
+        acc = accuracy(eval_serial(enc, data.x_test), data.y_test)
+        assert acc > 0.75   # generalizes: classes are separable mixtures
+
+
+class TestForest:
+    def test_majority_vote(self):
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(600, 8))
+        y = (x[:, 0] > 0).astype(int)
+        roots = [
+            train_cart(x[i::3], y[i::3], 2, CartConfig(max_depth=4)) for i in range(3)
+        ]
+        forest = EncodedForest.from_nodes(roots)
+        per_tree = eval_forest(forest, x.astype(np.float32))
+        assert per_tree.shape == (3, 600)
+        vote = majority_vote(per_tree, 2)
+        assert accuracy(np.asarray(vote), y) > 0.9
+
+    def test_route_topk_shape(self):
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(100, 8))
+        roots = [
+            train_cart(x, rng.integers(0, 8, 100), 8, CartConfig(max_depth=3))
+            for _ in range(4)
+        ]
+        forest = EncodedForest.from_nodes(roots)
+        routes = route_topk(eval_forest(forest, x.astype(np.float32)))
+        assert routes.shape == (100, 4)
+        assert int(jnp.max(routes)) < 8
+
+
+class TestSoftTree:
+    def test_leaf_probs_normalize(self):
+        cfg = SoftTreeConfig(depth=3, in_features=16, n_outputs=8)
+        params = init_soft_tree(cfg, jax.random.key(0))
+        x = jax.random.normal(jax.random.key(1), (32, 16))
+        lp = leaf_probs(cfg, params, x)
+        assert lp.shape == (32, 8)
+        np.testing.assert_allclose(np.asarray(lp.sum(-1)), 1.0, rtol=1e-5)
+
+    def test_hardened_tree_matches_soft_argmax_at_low_temperature(self):
+        cfg = SoftTreeConfig(depth=3, in_features=8, n_outputs=8, temperature=1e-4)
+        params = init_soft_tree(cfg, jax.random.key(2))
+        x = jax.random.normal(jax.random.key(3), (200, 8))
+        soft_choice = np.asarray(jnp.argmax(output_probs(cfg, params, x), -1))
+        enc = harden(cfg, params)
+        validate_encoding(enc)
+        z = np.asarray(x @ params.proj)
+        hard_choice = np.asarray(eval_serial(enc, z))
+        assert np.array_equal(soft_choice, hard_choice)
+
+    def test_hardened_speculative_equals_serial(self):
+        cfg = SoftTreeConfig(depth=4, in_features=12, n_outputs=16)
+        params = init_soft_tree(cfg, jax.random.key(4))
+        x = jax.random.normal(jax.random.key(5), (128, 12))
+        enc = harden(cfg, params)
+        z = np.asarray(x @ params.proj, np.float32)
+        ref = eval_serial(enc, z)
+        out = eval_speculative(
+            jnp.asarray(z), jnp.asarray(enc.attr_idx), jnp.asarray(enc.threshold),
+            jnp.asarray(enc.child), jnp.asarray(enc.class_val),
+            max_depth=4, use_onehot_matmul=True,
+        )
+        assert np.array_equal(np.asarray(out), ref)
+
+    def test_load_balance_loss_uniform_is_minimal(self):
+        uniform = jnp.full((64, 8), 1 / 8)
+        skewed = jnp.zeros((64, 8)).at[:, 0].set(1.0)
+        assert float(load_balance_loss(uniform)) < float(load_balance_loss(skewed))
+
+
+class TestAnalysis:
+    """§3.6 closed forms + equation (1) crossover."""
+
+    def test_serial_time_linear_in_m_and_depth(self):
+        assert analysis.t2_serial(100, 5) == 2 * analysis.t2_serial(50, 5)
+        assert analysis.t2_serial(100, 10) == 2 * analysis.t2_serial(100, 5)
+
+    def test_s3_speedup_approaches_p_with_free_memory(self):
+        s = analysis.s3_speedup(10_000, 11, 64)
+        assert abs(s - 64) < 1e-6
+
+    def test_s3_saturates_with_slow_memory(self):
+        cm = analysis.CostModel(sigma=10.0)
+        assert analysis.s3_speedup(10_000, 11, 1024, cm) < 3
+
+    def test_crossover_equation_1(self):
+        # p < 2 d / (1 + log2 d)
+        for d in (4, 11, 64):
+            bound = analysis.crossover_group_size(d)
+            assert abs(bound - 2 * d / (1 + math.log2(d))) < 1e-9
+            assert analysis.speculative_wins(d, bound - 0.01)
+            assert not analysis.speculative_wins(d, bound + 0.01)
+
+    def test_paper_conclusion_p16_d11_loses_in_theory(self):
+        """Paper §3.6: at p=16, d_µ=11 the idealized model says speculative
+        should NOT win — the SIMD experiments then show it does (§4.3), which
+        is the entire point of the paper."""
+        assert not analysis.speculative_wins(11.0, 16)
+
+    def test_t5_vs_t3_closed_form(self):
+        t3 = analysis.t3_data_parallel(65_536, 11, 256)
+        t5 = analysis.t5_speculative(65_536, 11, 256, 16)
+        s3 = analysis.s3_speedup(65_536, 11, 256)
+        s5 = analysis.s5_speedup(65_536, 11, 256, 16)
+        assert t3 < t5              # independent-processor model favors P3
+        assert s5 < s3
+
+    def test_observed_depths(self):
+        enc = breadth_first_encode(
+            train_cart(*_toy_xy(), 2, CartConfig(max_depth=5))
+        )
+        rec = _toy_xy()[0].astype(np.float32)
+        depths = analysis.observed_depths(enc, rec)
+        assert depths.min() >= 1
+        assert depths.max() <= tree_depth(enc)
+        d_mu = analysis.mean_traversal_depth(depths)
+        assert 1 <= d_mu <= tree_depth(enc)
+
+
+def _toy_xy():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(300, 6))
+    y = (x[:, 1] > 0).astype(int)
+    return x, y

@@ -1,0 +1,267 @@
+"""Substrate tests: optimizer, checkpointing, fault-tolerant loop, data
+pipeline, serving engine, losses."""
+
+import math
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ckpt
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.data.pipeline import DataConfig, SyntheticLM, pipeline_for
+from repro.models.api import build_model
+from repro.optim.adamw import (
+    adamw_apply, adamw_init, clip_by_global_norm, global_norm, lr_at,
+)
+from repro.serve.engine import Request, ServeEngine
+from repro.train.loop import LoopState, SimulatedFailure, StragglerWatchdog, train_loop
+from repro.train.step import make_train_step
+from repro.utils.losses import chunked_softmax_xent, softmax_xent
+
+
+class TestAdamW:
+    def _quadratic(self):
+        target = jnp.asarray([1.0, -2.0, 3.0])
+
+        def loss(p):
+            return jnp.sum((p["w"] - target) ** 2)
+
+        return loss, {"w": jnp.zeros(3)}
+
+    def test_converges_on_quadratic(self):
+        loss, params = self._quadratic()
+        cfg = TrainConfig(lr=0.1, warmup_steps=0, total_steps=300, weight_decay=0.0)
+        state = adamw_init(params)
+        for _ in range(300):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw_apply(params, g, state, cfg)
+        assert float(loss(params)) < 1e-3
+
+    def test_grad_clip(self):
+        tree = {"a": jnp.full((10,), 100.0)}
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        assert float(norm) > 100
+        assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+    def test_lr_schedule_warmup_and_decay(self):
+        cfg = TrainConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+        assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+        assert abs(float(lr_at(cfg, jnp.asarray(10))) - 1e-3) < 1e-9
+        assert float(lr_at(cfg, jnp.asarray(100))) < 2e-4
+
+    def test_weight_decay_only_on_matrices(self):
+        params = {"w": jnp.ones((4, 4)), "scale": jnp.ones((4,))}
+        g = jax.tree.map(jnp.zeros_like, params)
+        cfg = TrainConfig(lr=0.1, warmup_steps=0, weight_decay=0.5)
+        p2, _, _ = adamw_apply(params, g, adamw_init(params), cfg)
+        assert float(jnp.abs(p2["w"] - 1.0).max()) > 1e-3       # decayed
+        assert float(jnp.abs(p2["scale"] - 1.0).max()) < 1e-6   # untouched
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(10, dtype=jnp.float32), "b": {"c": jnp.ones((3, 4))}}
+        ckpt.save(str(tmp_path), 7, tree)
+        assert ckpt.latest_step(str(tmp_path)) == 7
+        out, manifest = ckpt.restore(str(tmp_path), 7, tree)
+        assert manifest["step"] == 7
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_atomic_publish_no_partial_dirs(self, tmp_path):
+        tree = {"a": jnp.ones(5)}
+        ckpt.save(str(tmp_path), 1, tree)
+        ckpt.save(str(tmp_path), 2, tree)
+        names = sorted(os.listdir(tmp_path))
+        assert "step_000001" in names and "step_000002" in names
+        assert not any(n.endswith(".tmp") for n in names)
+
+    def test_prune_keeps_newest(self, tmp_path):
+        tree = {"a": jnp.ones(2)}
+        for s in range(5):
+            ckpt.save(str(tmp_path), s, tree)
+        ckpt.prune(str(tmp_path), keep=2)
+        steps = [n for n in os.listdir(tmp_path) if n.startswith("step_")]
+        assert sorted(steps) == ["step_000003", "step_000004"]
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        ckpt.save(str(tmp_path), 0, {"a": jnp.ones((4,))})
+        with pytest.raises(ValueError):
+            ckpt.restore(str(tmp_path), 0, {"a": jnp.ones((5,))})
+
+    def test_async_saver(self, tmp_path):
+        saver = ckpt.AsyncSaver()
+        saver.submit(str(tmp_path), 3, {"a": jnp.ones(4)})
+        saver.wait()
+        assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+class TestFaultTolerantLoop:
+    def _setup(self, tmp_path):
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                          n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+                          dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        tcfg = TrainConfig(lr=1e-3, warmup_steps=1, total_steps=12, ckpt_every=3,
+                           ckpt_dir=str(tmp_path))
+        step = jax.jit(make_train_step(model, tcfg))
+        pipe = pipeline_for(cfg, ShapeConfig("s", 16, 2, "train"))
+        batches = lambda i: jax.tree.map(jnp.asarray, pipe(i))
+        state = LoopState(params=params, opt_state=adamw_init(params), step=0)
+        return state, step, batches, tcfg
+
+    def test_loop_runs_and_checkpoints(self, tmp_path):
+        state, step, batches, tcfg = self._setup(tmp_path)
+        state, report = train_loop(state, step, batches, tcfg, max_steps=7)
+        assert report.final_step == 7
+        assert ckpt.latest_step(str(tmp_path)) == 6
+        assert report.restarts == 0
+
+    def test_restart_after_injected_failure(self, tmp_path):
+        state, step, batches, tcfg = self._setup(tmp_path)
+        fired = {"n": 0}
+
+        def injector(i):
+            if i == 5 and fired["n"] == 0:
+                fired["n"] += 1
+                raise SimulatedFailure("node died")
+
+        def restore_fn(last_step):
+            tree = {"params": state.params, "opt": state.opt_state}
+            loaded, _ = ckpt.restore(tcfg.ckpt_dir, last_step, tree)
+            return LoopState(params=loaded["params"], opt_state=loaded["opt"],
+                             step=last_step)
+
+        final, report = train_loop(
+            state, step, batches, tcfg, max_steps=8,
+            failure_injector=injector, restore_fn=restore_fn,
+        )
+        assert report.restarts == 1
+        assert report.final_step == 8          # replayed through the failure
+
+    def test_deterministic_replay(self, tmp_path):
+        """Same (seed, step) → same batch → restart reproduces the loss."""
+        state, step, batches, tcfg = self._setup(tmp_path)
+        _, r1 = train_loop(state, step, batches, tcfg, max_steps=4)
+        state2, _, _, _ = self._setup(tmp_path)
+        _, r2 = train_loop(state2, step, batches, tcfg, max_steps=4)
+        np.testing.assert_allclose(r1.losses, r2.losses, rtol=1e-6)
+
+    def test_straggler_watchdog(self):
+        w = StragglerWatchdog(factor=3.0, warmup=3)
+        for _ in range(5):
+            assert not w.observe(0.1)
+        assert w.observe(1.0)
+        assert w.events == 1
+
+
+class TestDataPipeline:
+    def test_deterministic_by_step(self):
+        cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=3)
+        p = SyntheticLM(cfg)
+        a, b = p(5), p(5)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = p(6)
+        assert not np.array_equal(a["tokens"], c["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        p = SyntheticLM(DataConfig(vocab_size=50, seq_len=8, global_batch=2))
+        b = p(0)
+        np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+        assert np.all(b["labels"][:, -1] == -1)
+
+    def test_sharding_is_slice_of_global(self):
+        p = SyntheticLM(DataConfig(vocab_size=50, seq_len=8, global_batch=8))
+        full = p(2)
+        shard = p.shard(2, rank=1, world=4)
+        np.testing.assert_array_equal(shard["tokens"], full["tokens"][2:4])
+
+    def test_family_pipelines(self):
+        from repro.configs.registry import get_smoke_config
+
+        vlm = get_smoke_config("qwen2-vl-72b")
+        b = pipeline_for(vlm, ShapeConfig("s", 8, 2, "train"))(0)
+        assert "embeds" in b and "positions" in b and "tokens" not in b
+        assert b["positions"].shape == (2, 3, 8)
+        aud = get_smoke_config("whisper-medium")
+        b = pipeline_for(aud, ShapeConfig("s", 8, 2, "train"))(0)
+        assert b["embeds"].shape == (2, aud.encoder.n_frames, aud.d_model)
+
+
+class TestServeEngine:
+    def test_wave_batched_generation(self):
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                          n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                          dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        eng = ServeEngine(model, params, max_batch=2, max_len=48)
+        rng = np.random.default_rng(0)
+        reqs = [
+            Request(uid=i, prompt=rng.integers(0, 64, size=8).astype(np.int32),
+                    max_new_tokens=5)
+            for i in range(3)
+        ]
+        done = eng.run(reqs, pad_to=8)
+        assert all(r.done for r in done)
+        assert all(len(r.out_tokens) == 5 for r in done)
+        assert eng.stats.waves == 2            # 2 + 1 across waves
+
+    def test_greedy_matches_stepwise_forward(self):
+        cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                          n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                          dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.key(1))
+        prompt = np.arange(6, dtype=np.int32) % 64
+        eng = ServeEngine(model, params, max_batch=1, max_len=32)
+        req = Request(uid=0, prompt=prompt, max_new_tokens=4)
+        eng.run([req])
+        # reference: argmax rollout with full forwards
+        toks = list(prompt)
+        out_ref = []
+        for _ in range(4):
+            lg, _ = model.forward(params, {"tokens": jnp.asarray([toks])})
+            nxt = int(jnp.argmax(lg[0, -1]))
+            out_ref.append(nxt)
+            toks.append(nxt)
+        assert req.out_tokens == out_ref
+
+
+class TestLosses:
+    def test_softmax_xent_masks_padded_vocab(self):
+        logits = jnp.zeros((2, 4, 16)).at[..., 12:].set(100.0)  # pad region hot
+        labels = jnp.zeros((2, 4), jnp.int32)
+        nll, _ = softmax_xent(logits, labels, vocab_size=12)
+        assert abs(float(nll) - math.log(12)) < 1e-4
+
+    def test_chunked_equals_dense(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(2, 16, 8)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 30, size=(2, 16)), jnp.int32)
+        dense, _ = softmax_xent(x @ w, labels, vocab_size=30)
+        for chunk in (4, 8, 16):
+            c, _ = chunked_softmax_xent(x, w, labels, vocab_size=30, chunk=chunk)
+            np.testing.assert_allclose(float(c), float(dense), rtol=1e-5)
+
+    def test_chunked_gradients_match(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(2, 8, 8)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+        labels = jnp.asarray(rng.integers(0, 16, size=(2, 8)), jnp.int32)
+        g_dense = jax.grad(lambda w_: softmax_xent(x @ w_, labels, vocab_size=16)[0])(w)
+        g_chunk = jax.grad(
+            lambda w_: chunked_softmax_xent(x, w_, labels, vocab_size=16, chunk=4)[0]
+        )(w)
+        np.testing.assert_allclose(np.asarray(g_chunk), np.asarray(g_dense), rtol=1e-4)
+
+    def test_label_masking(self):
+        logits = jnp.asarray(np.random.default_rng(2).normal(size=(1, 4, 8)), jnp.float32)
+        labels = jnp.asarray([[1, 2, -1, -1]], jnp.int32)
+        nll_masked, nv = softmax_xent(logits, labels, vocab_size=8)
+        assert float(nv) == 2.0

@@ -1,0 +1,257 @@
+"""Paper core: Procedures 1–5 — unit + property tests.
+
+Every evaluator (serial P2, data-parallel P3, speculative P4/P5 in both
+node-eval formulations) must agree exactly with the branchless serial
+reference on every tree geometry hypothesis generates.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BOTTOM,
+    breadth_first_encode,
+    decode_to_linked,
+    eval_data_parallel_tree,
+    eval_serial,
+    eval_serial_vectorized_host,
+    eval_speculative_tree,
+    leaf_paths,
+    node_depths,
+    pad_tree,
+    paper_tree,
+    perfect_tree,
+    pointer_jump,
+    processor_node_map,
+    random_tree,
+    rounds_for_depth,
+    tree_depth,
+    validate_encoding,
+)
+
+
+def _records(n, a, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, a)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Procedure 1: encoding
+# ---------------------------------------------------------------------------
+
+
+class TestEncoding:
+    def test_paper_tree_geometry(self):
+        enc = breadth_first_encode(paper_tree())
+        assert enc.n_nodes == 31
+        assert enc.n_leaves == 16
+        assert enc.n_internal == 15
+        assert tree_depth(enc) == 11
+        validate_encoding(enc)
+
+    def test_right_child_is_left_plus_one(self):
+        enc = breadth_first_encode(perfect_tree(4, 8, 3))
+        internal = ~enc.is_leaf_mask
+        # by construction child stores left; right = left + 1 must be in range
+        assert np.all(enc.child[internal] + 1 < enc.n_nodes)
+
+    def test_leaves_self_loop_with_inf_threshold(self):
+        enc = breadth_first_encode(random_tree(n_attrs=5, n_classes=3, max_depth=6, seed=3))
+        leaf = enc.is_leaf_mask
+        assert np.array_equal(enc.child[leaf], np.nonzero(leaf)[0])
+        assert np.all(np.isposinf(enc.threshold[leaf]))
+
+    @given(st.integers(0, 50), st.integers(2, 9), st.floats(0.3, 1.0))
+    @settings(max_examples=40, deadline=None)
+    def test_roundtrip_and_invariants(self, seed, depth, balance):
+        root = random_tree(n_attrs=7, n_classes=5, max_depth=depth, seed=seed, balance=balance)
+        enc = breadth_first_encode(root)
+        validate_encoding(enc)
+        back = decode_to_linked(enc)
+        assert back.count_nodes() == root.count_nodes()
+        assert back.depth() == root.depth()
+        enc2 = breadth_first_encode(back)
+        for a, b in zip(enc, enc2):
+            assert np.array_equal(a, b)
+
+    def test_full_binary_tree_node_count(self):
+        enc = breadth_first_encode(perfect_tree(5, 4, 4))
+        assert enc.n_nodes == 2**6 - 1
+        assert enc.n_leaves == 2**5
+
+    def test_pad_tree_unreachable(self):
+        enc = breadth_first_encode(paper_tree())
+        padded = pad_tree(enc, 128)
+        validate_encoding_ignoring_pad(padded, enc.n_nodes)
+        rec = _records(100, 19)
+        assert np.array_equal(eval_serial(padded, rec), eval_serial(enc, rec))
+
+    def test_procedure5_tables(self):
+        enc = breadth_first_encode(paper_tree())
+        lp = leaf_paths(enc)
+        pm = processor_node_map(enc)
+        assert pm.shape == (15,)
+        leaf_idx = np.nonzero(enc.is_leaf_mask)[0]
+        assert np.array_equal(lp[leaf_idx], leaf_idx)
+        assert np.all(~enc.is_leaf_mask[pm])
+
+
+def validate_encoding_ignoring_pad(enc, n_real):
+    # pad nodes are self-looping leaves with class 0 and no parent
+    assert np.all(enc.child[n_real:] == np.arange(n_real, enc.n_nodes))
+    assert np.all(enc.class_val[n_real:] == 0)
+
+
+# ---------------------------------------------------------------------------
+# Procedures 2/3/4/5 agree
+# ---------------------------------------------------------------------------
+
+
+EVALUATORS = {
+    "data_parallel_fixed": lambda enc, rec, d: eval_data_parallel_tree(enc, rec, max_depth=d),
+    "data_parallel_early": lambda enc, rec, d: eval_data_parallel_tree(
+        enc, rec, max_depth=d, loop="early_exit"
+    ),
+    "speculative_j1": lambda enc, rec, d: eval_speculative_tree(
+        enc, rec, max_depth=d, jumps_per_round=1
+    ),
+    "speculative_j2": lambda enc, rec, d: eval_speculative_tree(
+        enc, rec, max_depth=d, jumps_per_round=2
+    ),
+    "speculative_onehot": lambda enc, rec, d: eval_speculative_tree(
+        enc, rec, max_depth=d, use_onehot_matmul=True
+    ),
+    "speculative_early": lambda enc, rec, d: eval_speculative_tree(
+        enc, rec, max_depth=d, early_exit=True
+    ),
+}
+
+
+@pytest.mark.parametrize("name", sorted(EVALUATORS))
+def test_evaluators_match_serial_on_paper_tree(name):
+    enc = breadth_first_encode(paper_tree())
+    rec = _records(512, 19, seed=1)
+    ref = eval_serial(enc, rec)
+    out = np.asarray(EVALUATORS[name](enc, rec, tree_depth(enc)))
+    assert np.array_equal(out, ref), name
+
+
+@given(
+    seed=st.integers(0, 100),
+    depth=st.integers(1, 10),
+    balance=st.floats(0.3, 1.0),
+    m=st.integers(1, 64),
+)
+@settings(max_examples=25, deadline=None)
+def test_all_evaluators_agree_property(seed, depth, balance, m):
+    root = random_tree(n_attrs=6, n_classes=4, max_depth=depth, seed=seed, balance=balance)
+    enc = breadth_first_encode(root)
+    d = max(tree_depth(enc), 1)
+    rec = _records(m, 6, seed=seed + 1)
+    ref = eval_serial(enc, rec)
+    assert np.array_equal(eval_serial_vectorized_host(enc, rec, d), ref)
+    for name, fn in EVALUATORS.items():
+        assert np.array_equal(np.asarray(fn(enc, rec, d)), ref), name
+
+
+def test_boundary_values_follow_left_on_equality():
+    """The paper's predicate is strict ``>``: r == t goes LEFT."""
+    from repro.core.tree import Node
+
+    root = Node(attr=0, threshold=1.0, left=Node(class_val=0), right=Node(class_val=1))
+    enc = breadth_first_encode(root)
+    rec = np.array([[1.0], [1.0 + 1e-6], [0.999999], [np.nan]], np.float32)
+    ref = eval_serial(enc, rec)
+    assert list(ref[:3]) == [0, 1, 0]
+    assert ref[3] == 0  # NaN compares false -> left, deterministically
+    for name, fn in EVALUATORS.items():
+        out = np.asarray(fn(enc, rec, 1))
+        assert np.array_equal(out, ref), name
+
+
+# ---------------------------------------------------------------------------
+# Pointer jumping (Procedure 4 reduction)
+# ---------------------------------------------------------------------------
+
+
+class TestPointerJump:
+    def test_rounds_for_depth(self):
+        assert rounds_for_depth(1) == 1
+        assert rounds_for_depth(2) == 1
+        assert rounds_for_depth(11, 1) == 4   # ceil(log2 11) = 4
+        assert rounds_for_depth(11, 2) == 2
+        assert rounds_for_depth(16, 1) == 4
+        assert rounds_for_depth(17, 1) == 5
+
+    @given(st.integers(0, 30), st.integers(2, 9))
+    @settings(max_examples=20, deadline=None)
+    def test_jump_convergence_theta_log_d(self, seed, depth):
+        """After ceil(log2 d) doublings the root points at its terminal leaf."""
+        import jax.numpy as jnp
+
+        root = random_tree(n_attrs=4, n_classes=3, max_depth=depth, seed=seed)
+        enc = breadth_first_encode(root)
+        d = max(tree_depth(enc), 1)
+        rec = _records(16, 4, seed=seed)
+        from repro.core.eval_speculative import speculative_node_eval
+
+        path = speculative_node_eval(
+            jnp.asarray(rec), jnp.asarray(enc.attr_idx), jnp.asarray(enc.threshold),
+            jnp.asarray(enc.child),
+        )
+        jumped = pointer_jump(path, rounds_for_depth(d, 1), 1)
+        leaf_of_root = np.asarray(jumped[:, 0])
+        assert np.all(enc.class_val[leaf_of_root] != BOTTOM)
+        assert np.array_equal(
+            enc.class_val[leaf_of_root], np.asarray(eval_serial(enc, rec))
+        )
+
+    def test_node_depths_consistent(self):
+        enc = breadth_first_encode(perfect_tree(4, 4, 4))
+        nd = node_depths(enc)
+        assert nd[0] == 0
+        assert nd.max() == 4
+        assert (nd == 4).sum() == 16
+
+
+# ---------------------------------------------------------------------------
+# Windowed evaluation (paper §6 future work, implemented)
+# ---------------------------------------------------------------------------
+
+
+class TestWindowed:
+    def test_matches_serial_on_paper_tree(self):
+        from repro.core import eval_windowed
+
+        enc = breadth_first_encode(paper_tree())
+        rec = _records(256, 19, seed=3)
+        ref = eval_serial(enc, rec)
+        for w in (1, 2, 4, 16):
+            out = np.asarray(eval_windowed(enc, rec, window_levels=w))
+            assert np.array_equal(out, ref), w
+
+    @given(st.integers(0, 40), st.integers(2, 10), st.integers(1, 6))
+    @settings(max_examples=20, deadline=None)
+    def test_windowed_property(self, seed, depth, w):
+        from repro.core import eval_windowed
+
+        root = random_tree(n_attrs=5, n_classes=4, max_depth=depth, seed=seed,
+                           balance=0.6)
+        enc = breadth_first_encode(root)
+        rec = _records(32, 5, seed=seed + 1)
+        ref = eval_serial(enc, rec)
+        out = np.asarray(eval_windowed(enc, rec, window_levels=w))
+        assert np.array_equal(out, ref)
+
+    def test_band_width_bounded(self):
+        """The per-round node axis is the widest w-level band, not N."""
+        from repro.core.windowed import level_offsets
+
+        enc = breadth_first_encode(perfect_tree(8, 4, 4))   # N = 511
+        starts = level_offsets(enc)
+        w = 3
+        widths = [int(starts[min(i + w, len(starts) - 1)] - starts[i])
+                  for i in range(0, len(starts) - 1, w)]
+        assert max(widths) < enc.n_nodes   # 448 vs 511 for the last band
