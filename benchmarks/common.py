@@ -17,7 +17,10 @@ Timing conventions mirror the paper:
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
+from pathlib import Path
 
 import numpy as np
 import jax
@@ -63,13 +66,60 @@ class Timing:
     max_us: float
     std_us: float
     n: int
+    median_us: float = 0.0
 
     def row(self) -> str:
         return (f"{self.name:32s} {self.mean_us:12.1f} {self.min_us:12.1f} "
                 f"{self.max_us:12.1f} {self.std_us:10.2f}")
 
 
-def time_fn(name: str, fn, *, iters: int = 50, warmup: int = 3) -> Timing:
+# Machine-readable perf records: every time_fn call lands here (plus any
+# caller-supplied metadata) and run.py drains the buffer into a
+# results/BENCH_<name>.json after each bench, so the perf trajectory is
+# diffable across PRs instead of living only in stdout tables.
+_RECORDS: list[dict] = []
+
+
+def record_timing(t: Timing, **meta) -> None:
+    _RECORDS.append({
+        "name": t.name,
+        "median_ms": t.median_us / 1e3,
+        "mean_ms": t.mean_us / 1e3,
+        "min_ms": t.min_us / 1e3,
+        "max_ms": t.max_us / 1e3,
+        "std_ms": t.std_us / 1e3,
+        "iters": t.n,
+        "backend": jax.default_backend(),
+        **meta,
+    })
+
+
+def drain_records() -> list[dict]:
+    out, _RECORDS[:] = list(_RECORDS), []
+    return out
+
+
+def bench_json_path(name: str) -> Path:
+    root = Path(os.environ.get("REPRO_BENCH_DIR",
+                               Path(__file__).resolve().parent.parent / "results"))
+    return root / f"BENCH_{name}.json"
+
+
+def write_bench_json(name: str, entries: list[dict], **header) -> Path:
+    path = bench_json_path(name)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "bench": name,
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        **header,
+        "entries": entries,
+    }
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+def time_fn(name: str, fn, *, iters: int = 50, warmup: int = 3, **meta) -> Timing:
     for _ in range(warmup):
         fn()
     samples = []
@@ -78,8 +128,10 @@ def time_fn(name: str, fn, *, iters: int = 50, warmup: int = 3) -> Timing:
         fn()
         samples.append((time.perf_counter() - t0) * 1e6)
     a = np.asarray(samples)
-    return Timing(name, float(a.mean()), float(a.min()), float(a.max()),
-                  float(a.std()), iters)
+    t = Timing(name, float(a.mean()), float(a.min()), float(a.max()),
+               float(a.std()), iters, float(np.median(a)))
+    record_timing(t, **meta)
+    return t
 
 
 def header() -> str:

@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run table1     # one
+
+Each bench also emits a machine-readable ``results/BENCH_<name>.json``
+(per-variant median ms + metadata, collected by ``common.time_fn``) so perf
+is tracked across PRs, not just eyeballed in stdout tables.
 """
 
 from __future__ import annotations
@@ -10,12 +14,15 @@ import sys
 import time
 
 
-BENCHES = ["table1", "fig4", "analysis", "m_sweep", "geometry", "moe_router"]
+BENCHES = ["table1", "fig4", "analysis", "m_sweep", "geometry", "moe_router", "tune"]
 
 
 def _run(name: str) -> None:
+    from benchmarks import common
+
     t0 = time.perf_counter()
     print(f"\n=== {name} " + "=" * max(1, 66 - len(name)))
+    common.drain_records()  # start the bench with an empty perf buffer
     if name == "table1":
         from benchmarks.table1_eval_times import main
         main(iters=10)
@@ -34,8 +41,15 @@ def _run(name: str) -> None:
     elif name == "moe_router":
         from benchmarks.moe_router_bench import main
         main()
+    elif name == "tune":
+        from benchmarks.tune_sweep import main
+        main()
     else:
         raise SystemExit(f"unknown bench {name!r}; available: {BENCHES}")
+    entries = common.drain_records()
+    if entries and name != "tune":  # tune_sweep writes its own richer report
+        path = common.write_bench_json(name, entries)
+        print(f"--- wrote {path}")
     print(f"--- {name} done in {time.perf_counter() - t0:.1f}s")
 
 

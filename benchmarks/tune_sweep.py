@@ -1,0 +1,120 @@
+"""Autotuner sweep: populate the tune cache, then score tuned dispatch.
+
+For a set of distinct workload shapes (record count × tree geometry ×
+attribute width) this bench:
+
+  1. runs :func:`repro.tune.tune_workload` — timing every registered kernel
+     variant (the fixed strategies a caller could have hardcoded) and
+     persisting the per-bucket winner into the tune cache;
+  2. times ``TunedEvaluator`` dispatch end-to-end against the warm cache;
+  3. emits ``results/BENCH_tree_eval.json`` comparing tuned dispatch with
+     every fixed variant, flagging whether tuned is within noise of the best.
+
+    PYTHONPATH=src python -m benchmarks.tune_sweep
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_bench_json
+from repro.core import breadth_first_encode, paper_tree, perfect_tree, random_tree, tree_depth
+from repro.kernels.tree_eval.ops import get_variant
+from repro.tune import TuneCache, TunedEvaluator, WorkloadShape, tune_workload
+from repro.tune.measure import interleaved_samples
+
+# Distinct operating points (paper §5–§6: the winner depends on where you sit).
+WORKLOADS = [
+    # name, tree builder, M, A
+    ("paper_d11_n31", lambda: paper_tree(), 16384, 19),
+    ("deep_perfect_d8_n511", lambda: perfect_tree(8, 19, 7, seed=1), 2048, 19),
+    ("wide_shallow_d4_a130", lambda: random_tree(
+        n_attrs=130, n_classes=7, max_depth=4, min_depth=4, seed=2, balance=1.0), 8192, 130),
+]
+
+
+def sweep_one(name, build_tree, m, n_attrs, *, cache, iters, warmup):
+    enc = breadth_first_encode(build_tree())
+    rec = jnp.asarray(
+        np.random.default_rng(zlib.crc32(name.encode())).normal(size=(m, n_attrs)),
+        jnp.float32,
+    )
+    shape = WorkloadShape.of(rec, enc)
+    print(f"\n[{name}] shape={shape} bucket={shape.bucket()}")
+
+    entry, measurements = tune_workload(
+        rec, enc, cache=cache, iters=iters, warmup=warmup, verbose=True
+    )
+
+    # Best median per variant (min over its parameter grid) = the fixed
+    # strategies tuned dispatch competes against.
+    fixed: dict[str, float] = {}
+    for meas in measurements:
+        if meas.failed:
+            continue
+        v = meas.candidate.variant
+        fixed[v] = min(fixed.get(v, float("inf")), meas.median_ms)
+    best_fixed_ms = min(fixed.values())
+
+    # Tuned dispatch end-to-end against the warm cache (resolution memo +
+    # bucket padding included — what a serving call actually pays), sampled
+    # interleaved with the winning fixed variant so host-load drift can't
+    # masquerade as dispatch overhead.
+    ev = TunedEvaluator(enc, cache=cache)
+    spec = get_variant(entry.variant)
+    depth = max(tree_depth(enc), 1)
+    samples = interleaved_samples(
+        {
+            "fixed": lambda: spec.fn(rec, enc, max_depth=depth, **entry.params),
+            "tuned": lambda: ev(rec),
+        },
+        warmup=warmup,
+        iters=max(iters, 15),
+    )
+    tuned_ms = float(np.median(samples["tuned"]))
+    best_fixed_interleaved_ms = float(np.median(samples["fixed"]))
+    # paired per-round ratio: both contenders ran adjacently inside each
+    # round, so host-load drift divides out of the verdict
+    ratio = float(np.median(np.asarray(samples["tuned"]) / np.asarray(samples["fixed"])))
+    ok = ratio <= 1.25
+    print(f"  tuned {tuned_ms:.3f} ms vs best fixed {best_fixed_interleaved_ms:.3f} ms, "
+          f"paired ratio {ratio:.3f} "
+          f"({entry.variant} {entry.params}) -> {'OK' if ok else 'REGRESSION'}")
+
+    return {
+        "workload": name,
+        "shape": dataclasses.asdict(shape),
+        "bucket": dataclasses.asdict(shape.bucket()),
+        "depth": int(max(tree_depth(enc), 1)),
+        "fixed_variants_ms": {k: round(v, 6) for k, v in sorted(fixed.items())},
+        "best_fixed_ms": round(best_fixed_ms, 6),
+        "best_fixed_interleaved_ms": round(best_fixed_interleaved_ms, 6),
+        "best_variant": entry.variant,
+        "best_params": entry.params,
+        "tuned_ms": round(tuned_ms, 6),
+        "tuned_vs_best_fixed": round(ratio, 4),
+        "tuned_within_noise_of_best": bool(ok),
+    }
+
+
+def main(iters: int = 7, warmup: int = 2, cache_path=None) -> dict:
+    cache = TuneCache(cache_path)
+    entries = [
+        sweep_one(name, build, m, a, cache=cache, iters=iters, warmup=warmup)
+        for name, build, m, a in WORKLOADS
+    ]
+    path = write_bench_json(
+        "tree_eval", entries, cache_path=str(cache.path), cache_entries=len(cache)
+    )
+    n_ok = sum(e["tuned_within_noise_of_best"] for e in entries)
+    print(f"\ntuned within noise of best fixed on {n_ok}/{len(entries)} shapes")
+    print(f"wrote {path}")
+    return {"entries": entries, "path": str(path)}
+
+
+if __name__ == "__main__":
+    main()

@@ -30,7 +30,13 @@ from repro.core.eval_speculative import (
     speculative_node_eval,
 )
 from repro.core.cart import CartConfig, accuracy, train_cart
-from repro.core.forest import EncodedForest, eval_forest, majority_vote, route_topk
+from repro.core.forest import (
+    EncodedForest,
+    eval_forest,
+    eval_forest_tuned,
+    majority_vote,
+    route_topk,
+)
 from repro.core.soft_tree import (
     SoftTreeConfig,
     SoftTreeParams,
@@ -73,6 +79,7 @@ __all__ = [
     "train_cart",
     "EncodedForest",
     "eval_forest",
+    "eval_forest_tuned",
     "majority_vote",
     "route_topk",
     "SoftTreeConfig",

@@ -43,6 +43,12 @@ class EncodedForest:
     def from_nodes(cls, roots: Sequence[Node]) -> "EncodedForest":
         return cls([breadth_first_encode(r) for r in roots])
 
+    def tree(self, i: int) -> EncodedTree:
+        """Recover tree ``i`` as a standalone (padded) encoding."""
+        return EncodedTree(
+            self.attr_idx[i], self.threshold[i], self.child[i], self.class_val[i]
+        )
+
 
 def eval_forest(
     forest: EncodedForest,
@@ -72,6 +78,38 @@ def eval_forest(
         jnp.asarray(forest.child),
         jnp.asarray(forest.class_val),
     )
+
+
+def eval_forest_tuned(
+    forest: "EncodedForest | Sequence[EncodedTree]",
+    records,
+    *,
+    cache=None,
+    autotune: bool = False,
+    engines: tuple[str, ...] | None = None,
+) -> jax.Array:
+    """Per-tree class assignments, shape (T, M), via autotuned dispatch.
+
+    Each tree routes through :func:`repro.tune.tuned_eval`'s evaluator, so
+    the per-shape winning variant (cached, autotuned, or the §3.6-model
+    heuristic) is selected per tree — trees of different geometry inside one
+    forest may legitimately pick different kernels.
+    """
+    from repro.tune import TuneCache, TunedEvaluator
+
+    if cache is None:
+        cache = TuneCache()  # one shared handle: one disk read for the forest
+    trees = (
+        [forest.tree(i) for i in range(forest.n_trees)]
+        if isinstance(forest, EncodedForest)
+        else list(forest)
+    )
+    rec = jnp.asarray(records, jnp.float32)
+    outs = [
+        TunedEvaluator(t, cache=cache, autotune=autotune, engines=engines)(rec)
+        for t in trees
+    ]
+    return jnp.stack(outs)
 
 
 def majority_vote(per_tree: jax.Array, n_classes: int) -> jax.Array:

@@ -1,6 +1,26 @@
 """TPU Pallas kernels for the paper's tree-evaluation hot spot."""
 
-from repro.kernels.tree_eval.ops import PackedTree, forest_eval, tree_eval
+from repro.kernels.tree_eval.ops import (
+    VARIANTS,
+    PackedTree,
+    VariantSpec,
+    forest_eval,
+    get_variant,
+    list_variants,
+    register_variant,
+    tree_eval,
+)
 from repro.kernels.tree_eval.ref import forest_eval_ref, tree_eval_ref
 
-__all__ = ["PackedTree", "forest_eval", "tree_eval", "forest_eval_ref", "tree_eval_ref"]
+__all__ = [
+    "PackedTree",
+    "VARIANTS",
+    "VariantSpec",
+    "forest_eval",
+    "forest_eval_ref",
+    "get_variant",
+    "list_variants",
+    "register_variant",
+    "tree_eval",
+    "tree_eval_ref",
+]

@@ -8,8 +8,10 @@ interpret-mode fallback off-TPU, and unpadding of results.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -186,3 +188,140 @@ def forest_eval(
 ) -> jax.Array:
     """Per-tree kernel evaluation, (T, M). Trees may have different sizes."""
     return jnp.stack([tree_eval(records, t, **kw) for t in trees])
+
+
+# ---------------------------------------------------------------------------
+# Variant registry (consumed by repro.tune)
+# ---------------------------------------------------------------------------
+#
+# Every registered variant is a semantically identical evaluator of the
+# branchless encoded tree with a uniform calling convention:
+#
+#     fn(records, enc: EncodedTree, *, max_depth: int, **params) -> (M,) int32
+#
+# ``params`` only ever contains keys named in ``tunables``; the tuner
+# enumerates (variant × parameter grid) candidates from this table and the
+# dispatch layer replays the winning entry.
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantSpec:
+    """One evaluator implementation plus the knobs the tuner may sweep.
+
+    Attributes:
+      name: registry key, e.g. ``"pallas_speculative_onehot"``.
+      algorithm: "speculative" (Procedure 4/5) or "data_parallel" (Procedure 3)
+        — links the variant to the §3.6 runtime model (T₅ vs T₃).
+      engine: "pallas" (TPU kernel path) or "jnp" (XLA-compiled host/TPU path).
+      jump_mode: node-evaluation formulation, "gather" or "onehot" (MXU).
+      tunables: names of the free parameters, e.g. ("block_m",).
+      fn: the evaluator callable (uniform signature above).
+    """
+
+    name: str
+    algorithm: str
+    engine: str
+    jump_mode: str
+    tunables: tuple[str, ...]
+    fn: Callable
+
+
+VARIANTS: dict[str, VariantSpec] = {}
+
+
+def register_variant(spec: VariantSpec) -> VariantSpec:
+    if spec.name in VARIANTS:
+        raise ValueError(f"variant {spec.name!r} already registered")
+    VARIANTS[spec.name] = spec
+    return spec
+
+
+def get_variant(name: str) -> VariantSpec:
+    try:
+        return VARIANTS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown variant {name!r}; registered: {sorted(VARIANTS)}"
+        ) from None
+
+
+def list_variants(*, engine: str | None = None, algorithm: str | None = None) -> list[VariantSpec]:
+    out = [
+        s
+        for s in VARIANTS.values()
+        if (engine is None or s.engine == engine)
+        and (algorithm is None or s.algorithm == algorithm)
+    ]
+    return sorted(out, key=lambda s: s.name)
+
+
+def _pallas_fn(algorithm: str, jump_mode: str) -> Callable:
+    def fn(records, enc, *, max_depth=None, **params):
+        del max_depth  # PackedTree derives it from the encoding
+        return tree_eval(
+            records,
+            enc,
+            algorithm=algorithm,
+            jump_mode=jump_mode,
+            block_m=params.get("block_m"),
+        )
+
+    return fn
+
+
+def _jnp_speculative_fn(jump_mode: str) -> Callable:
+    from repro.core.eval_speculative import eval_speculative_tree
+
+    def fn(records, enc, *, max_depth, **params):
+        return eval_speculative_tree(
+            enc,
+            records,
+            max_depth=max_depth,
+            jumps_per_round=int(params.get("jumps_per_round", 2)),
+            use_onehot_matmul=(jump_mode == "onehot"),
+        )
+
+    return fn
+
+
+def _jnp_data_parallel_fn(records, enc, *, max_depth, **params):
+    from repro.core.eval_dataparallel import eval_data_parallel_tree
+
+    del params
+    return eval_data_parallel_tree(enc, records, max_depth=max_depth)
+
+
+for _alg, _jm in (("speculative", "gather"), ("speculative", "onehot"), ("data_parallel", "gather")):
+    register_variant(
+        VariantSpec(
+            name=f"pallas_{_alg}" + (f"_{_jm}" if _alg == "speculative" else ""),
+            algorithm=_alg,
+            engine="pallas",
+            jump_mode=_jm,
+            tunables=("block_m",),
+            fn=_pallas_fn(_alg, _jm),
+        )
+    )
+
+for _jm in ("gather", "onehot"):
+    register_variant(
+        VariantSpec(
+            name=f"jnp_speculative_{_jm}",
+            algorithm="speculative",
+            engine="jnp",
+            jump_mode=_jm,
+            tunables=("jumps_per_round",),
+            fn=_jnp_speculative_fn(_jm),
+        )
+    )
+
+register_variant(
+    VariantSpec(
+        name="jnp_data_parallel",
+        algorithm="data_parallel",
+        engine="jnp",
+        jump_mode="gather",
+        tunables=(),
+        fn=_jnp_data_parallel_fn,
+    )
+)

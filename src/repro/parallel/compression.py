@@ -71,7 +71,14 @@ def cross_pod_compressed_mean(mesh, grads, err, specs):
     instead arrange the loss to mean over ('data',) only and do the pod-axis
     reduction here explicitly with shard_map.  Returns (mean_grads, new_err).
     """
-    from jax import shard_map
+    try:  # jax >= 0.6 top-level API
+        from jax import shard_map
+
+        smap_kw = {"check_vma": False}
+    except ImportError:  # jax 0.4.x
+        from jax.experimental.shard_map import shard_map
+
+        smap_kw = {"check_rep": False}
 
     n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
     if n_pods == 1:
@@ -92,7 +99,7 @@ def cross_pod_compressed_mean(mesh, grads, err, specs):
         mesh=mesh,
         in_specs=tuple(flat_s) + tuple(flat_s),
         out_specs=tuple(flat_s) + tuple(flat_s),
-        check_vma=False,
+        **smap_kw,
     )
     outs = fn(*flat_g, *flat_e)
     k = len(flat_g)

@@ -1,1 +1,8 @@
-from repro.serve.engine import EngineStats, Request, ServeEngine
+from repro.serve.engine import (
+    EngineStats,
+    Request,
+    ServeEngine,
+    TreeEngineStats,
+    TreeRequest,
+    TreeServeEngine,
+)

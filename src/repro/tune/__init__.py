@@ -1,0 +1,52 @@
+"""repro.tune — autotuning & variant dispatch for the tree-eval kernels.
+
+The paper's result is an *operating-point* result: speculative evaluation
+(Procedure 5) beats data decomposition (Procedure 3) only where its runtime
+model says it should.  §4's analysis writes both runtimes over the workload
+shape — record count M, tree nodes N (p processors per record group), mean
+traversal depth d_µ — and equation (1) gives the crossover
+``p < 2·d_µ/(1 + log₂ d_µ)``.  This package operationalises that analysis:
+instead of hardcoding one evaluator per call site, callers say
+``tuned_eval(records, tree)`` and the subsystem picks the variant that wins
+*at this shape on this backend*.
+
+Module map (→ paper concept):
+
+  space.py      the workload shape (M, N, A, d) the §4 model is written
+                over; shape bucketing; enumeration of valid (variant,
+                parameter) candidates from the kernel registry.
+  measure.py    the paper's measurement discipline (warmup, synchronised
+                timing, medians over repeats) applied to each candidate.
+  cache.py      persistent JSON store of per-(backend, shape-bucket)
+                winners with an in-process LRU front.
+  heuristic.py  the §4 closed forms (T₃ vs T₅, equation (1) crossover) as
+                the no-cache fallback policy.
+  dispatch.py   ``tuned_eval`` / ``TunedEvaluator``: memo → cache →
+                optional autotune → heuristic, with bucket-padded batches.
+
+Every variant is exact, so tuning is purely a performance decision: results
+are bit-identical to the serial branchless reference (Procedure 2).
+"""
+
+from repro.tune.cache import TuneCache, TuneEntry, default_cache_path
+from repro.tune.dispatch import TunedEvaluator, tuned_eval
+from repro.tune.heuristic import heuristic_candidate, predicted_times
+from repro.tune.measure import Measurement, measure_candidate, time_callable, tune_workload
+from repro.tune.space import Candidate, WorkloadShape, search_space
+
+__all__ = [
+    "Candidate",
+    "Measurement",
+    "TuneCache",
+    "TuneEntry",
+    "TunedEvaluator",
+    "WorkloadShape",
+    "default_cache_path",
+    "heuristic_candidate",
+    "measure_candidate",
+    "predicted_times",
+    "search_space",
+    "time_callable",
+    "tune_workload",
+    "tuned_eval",
+]

@@ -1,0 +1,129 @@
+"""Persistent best-variant cache: JSON on disk, LRU dict in front.
+
+One JSON file holds every tuning result this machine has produced, keyed by
+``backend|M…|N…|A…|d…`` bucket strings (see
+:meth:`repro.tune.space.WorkloadShape.key`).  Lookups go through a bounded
+in-process LRU so the hot dispatch path never touches the filesystem;
+writes go straight through to disk (atomic rename) so concurrent processes
+at worst lose a race, never corrupt the file.
+
+Default location: ``$REPRO_TUNE_CACHE`` or ``~/.cache/repro_tune/cache.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from collections import OrderedDict
+from pathlib import Path
+from typing import Optional
+
+CACHE_ENV = "REPRO_TUNE_CACHE"
+CACHE_VERSION = 1
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return Path(env).expanduser()
+    return Path("~/.cache/repro_tune/cache.json").expanduser()
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneEntry:
+    """The winning candidate for one shape bucket."""
+
+    variant: str
+    params: dict
+    median_ms: float
+    # provenance, for reports / staleness checks
+    shape: dict | None = None
+    backend: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TuneEntry":
+        return cls(
+            variant=str(d["variant"]),
+            params=dict(d.get("params", {})),
+            median_ms=float(d.get("median_ms", 0.0)),
+            shape=d.get("shape"),
+            backend=str(d.get("backend", "")),
+        )
+
+
+class TuneCache:
+    """JSON-backed best-variant store with a bounded LRU front.
+
+    The LRU only caches *hits*; misses always re-check the loaded table so a
+    concurrent tuner's writes show up after :meth:`reload`.
+    """
+
+    def __init__(self, path: os.PathLike | str | None = None, *, lru_size: int = 128):
+        self.path = Path(path) if path is not None else default_cache_path()
+        self.lru_size = lru_size
+        self._lru: OrderedDict[str, TuneEntry] = OrderedDict()
+        self._table: dict[str, dict] = {}
+        self.reload()
+
+    # -- persistence --------------------------------------------------------
+
+    def reload(self) -> None:
+        """(Re)read the on-disk table; tolerates a missing/corrupt file."""
+        self._table = {}
+        try:
+            raw = json.loads(self.path.read_text())
+            if isinstance(raw, dict) and raw.get("version") == CACHE_VERSION:
+                self._table = dict(raw.get("entries", {}))
+        except (OSError, ValueError):
+            pass
+        self._lru.clear()
+
+    def _flush(self) -> None:
+        payload = {"version": CACHE_VERSION, "entries": self._table}
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=self.path.parent, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- access -------------------------------------------------------------
+
+    def lookup(self, key: str) -> Optional[TuneEntry]:
+        hit = self._lru.get(key)
+        if hit is not None:
+            self._lru.move_to_end(key)
+            return hit
+        raw = self._table.get(key)
+        if raw is None:
+            return None
+        entry = TuneEntry.from_json(raw)
+        self._lru[key] = entry
+        if len(self._lru) > self.lru_size:
+            self._lru.popitem(last=False)
+        return entry
+
+    def store(self, key: str, entry: TuneEntry) -> None:
+        self._table[key] = entry.to_json()
+        self._lru[key] = entry
+        self._lru.move_to_end(key)
+        if len(self._lru) > self.lru_size:
+            self._lru.popitem(last=False)
+        self._flush()
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def keys(self) -> list[str]:
+        return sorted(self._table)

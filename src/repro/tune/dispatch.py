@@ -1,0 +1,124 @@
+"""Transparent variant dispatch: ``tuned_eval(records, tree)``.
+
+Resolution order for each (backend, shape-bucket):
+
+  1. in-process memo (one dict probe on the hot path),
+  2. persistent cache (:class:`repro.tune.cache.TuneCache`),
+  3. optional on-miss autotune (``autotune=True`` — measures the search
+     space once and persists the winner),
+  4. the §3.6-model heuristic (:mod:`repro.tune.heuristic`).
+
+Dispatch zero-pads the record batch up to the bucket's M before running the
+variant and slices the padding back off, so every call inside a bucket hits
+one jit specialisation and the timings stored by the tuner stay honest.
+All variants are exact (bit-identical to the serial reference), so dispatch
+never changes results — only which kernel produces them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import EncodedTree, tree_depth
+from repro.kernels.tree_eval.ops import VARIANTS, get_variant
+from repro.tune.cache import TuneCache, TuneEntry
+from repro.tune.heuristic import heuristic_candidate
+from repro.tune.measure import bucket_pad_records, tune_workload
+from repro.tune.space import Candidate, WorkloadShape
+
+
+class TunedEvaluator:
+    """Reusable tuned dispatcher for one encoded tree.
+
+    Prefer this over the functional :func:`tuned_eval` on hot paths (serving,
+    forests): it owns the depth computation, the cache handle, and a
+    per-bucket resolution memo, so steady-state calls do no lookup work.
+    """
+
+    def __init__(
+        self,
+        enc: EncodedTree,
+        *,
+        cache: TuneCache | None = None,
+        autotune: bool = False,
+        engines: tuple[str, ...] | None = None,
+        measure_kw: dict | None = None,
+    ):
+        self.enc = enc
+        self.cache = cache if cache is not None else TuneCache()
+        self.autotune = autotune
+        self.engines = engines
+        self.measure_kw = dict(measure_kw or {})
+        self.depth = max(tree_depth(enc), 1)
+        self._resolved: dict[str, tuple[Candidate, str]] = {}
+        # (M, A) → (spec, params, bucket_m): the steady-state call path does
+        # one dict probe and zero array ops beyond the kernel itself.
+        self._fast: dict[tuple[int, int], tuple] = {}
+
+    def resolve(self, records) -> tuple[Candidate, str]:
+        """Pick the candidate for this batch; returns (candidate, source)
+        with source ∈ {"memo", "cache", "autotune", "heuristic"}."""
+        shape = WorkloadShape.of(records, self.enc, self.depth)
+        backend = jax.default_backend()
+        key = shape.key(backend)
+        hit = self._resolved.get(key)
+        if hit is not None:
+            return hit[0], "memo"
+
+        entry = self.cache.lookup(key)
+        source = "cache"
+        if entry is not None and entry.variant in VARIANTS:
+            cand = Candidate.make(entry.variant, **entry.params)
+        elif self.autotune:
+            entry, _ = tune_workload(
+                records,
+                self.enc,
+                cache=self.cache,
+                engines=self.engines,
+                backend=backend,
+                **self.measure_kw,
+            )
+            cand = Candidate.make(entry.variant, **entry.params)
+            source = "autotune"
+        else:
+            cand = heuristic_candidate(shape, engines=self.engines)
+            source = "heuristic"
+        self._resolved[key] = (cand, source)
+        return cand, source
+
+    def __call__(self, records) -> jax.Array:
+        if not (isinstance(records, jax.Array) and records.dtype == jnp.float32):
+            records = jnp.asarray(records, jnp.float32)
+        m, a = records.shape
+        fast = self._fast.get((m, a))
+        if fast is None:
+            cand, _ = self.resolve(records)
+            spec = get_variant(cand.variant)
+            bucket_m = WorkloadShape(m, self.enc.n_nodes, a, self.depth).bucket().m
+            fast = (spec, cand.param_dict, bucket_m)
+            self._fast[(m, a)] = fast
+        spec, params, bucket_m = fast
+        out = spec.fn(
+            bucket_pad_records(records, bucket_m),
+            self.enc,
+            max_depth=self.depth,
+            **params,
+        )
+        return out if out.shape[0] == m else out[:m]
+
+
+def tuned_eval(
+    records,
+    tree: EncodedTree,
+    *,
+    cache: TuneCache | None = None,
+    autotune: bool = False,
+    engines: tuple[str, ...] | None = None,
+) -> jax.Array:
+    """Evaluate ``tree`` over ``records`` with the cached-best variant.
+
+    One-shot convenience wrapper around :class:`TunedEvaluator`; returns the
+    (M,) int32 class assignments, bit-identical to ``eval_serial``.
+    """
+    return TunedEvaluator(tree, cache=cache, autotune=autotune, engines=engines)(records)

@@ -1,0 +1,88 @@
+"""Model-based fallback: pick a variant from the paper's runtime analysis.
+
+When the cache has no entry for a shape bucket (first call on a new machine,
+or tuning disabled) dispatch still has to pick a variant.  We evaluate the
+paper's closed-form runtime model (§3.6 / §4 analysis, `repro.core.analysis`)
+at the workload's operating point:
+
+    T₃(P) = (M/P)·d_µ·(t_e + t_c) + t_i + t_s(M)          (data decomposition)
+    T₅(P) = (M·p/P)·(t_e + log₂(d_µ)·t_c) + t_i + t_s(M)  (speculative)
+
+with p = the record-group processor count, which in our TPU mapping is the
+number of *internal* nodes each record's lane-group evaluates speculatively.
+The cheaper predicted time picks the algorithm — equivalently, equation (1)'s
+crossover ``p < 2·d_µ/(1 + log₂ d_µ)`` under t_e ≈ t_c — and backend rules
+pick engine/jump-mode (Pallas + one-hot MXU on TPU, XLA gather elsewhere).
+"""
+
+from __future__ import annotations
+
+from repro.core.analysis import CostModel, t3_data_parallel, t5_speculative
+from repro.kernels.tree_eval.ops import choose_block_m, on_tpu
+from repro.tune.space import MAX_ONEHOT_NODES, Candidate, WorkloadShape, default_engines
+
+
+def default_p_group(shape: WorkloadShape) -> int:
+    """Processors per record group: the internal nodes of a full binary tree."""
+    return max(1, (shape.n_nodes - 1) // 2)
+
+
+def default_d_mu(shape: WorkloadShape) -> float:
+    """Estimated mean traversal depth when no measurement is supplied.
+
+    Real d_µ lies between log₂(leaves) (balanced) and depth (vine); the
+    midpoint is a serviceable prior for an untuned shape.
+    """
+    import math
+
+    balanced = math.log2(max(shape.n_nodes, 2))
+    return max(1.0, (balanced + shape.depth) / 2.0)
+
+
+def predicted_times(
+    shape: WorkloadShape,
+    *,
+    cm: CostModel = CostModel(),
+    d_mu: float | None = None,
+    p_group: float | None = None,
+    p_total: float = 1.0,
+) -> dict[str, float]:
+    """§3.6 model runtimes per algorithm for this shape."""
+    d = d_mu if d_mu is not None else default_d_mu(shape)
+    d = max(float(d), 1.0)
+    p = p_group if p_group is not None else default_p_group(shape)
+    return {
+        "data_parallel": t3_data_parallel(shape.m, d, p_total, cm),
+        "speculative": t5_speculative(shape.m, d, p_total, p, cm),
+    }
+
+
+def heuristic_candidate(
+    shape: WorkloadShape,
+    *,
+    cm: CostModel = CostModel(),
+    d_mu: float | None = None,
+    p_group: float | None = None,
+    engines: tuple[str, ...] | None = None,
+) -> Candidate:
+    """Shape-derived variant choice mirroring the paper's analysis."""
+    times = predicted_times(shape, cm=cm, d_mu=d_mu, p_group=p_group)
+    algorithm = min(times, key=times.get)
+    engines = default_engines() if engines is None else tuple(engines)
+    engine = "pallas" if "pallas" in engines else "jnp"
+
+    onehot_ok = shape.n_nodes <= MAX_ONEHOT_NODES
+    if engine == "pallas":
+        if algorithm == "data_parallel":
+            name, jump_mode = "pallas_data_parallel", "gather"
+        else:
+            jump_mode = "onehot" if (on_tpu() and onehot_ok) else "gather"
+            name = f"pallas_speculative_{jump_mode}"
+        b = shape.bucket()
+        bm = choose_block_m(b.n_nodes, b.n_attrs, jump_mode=jump_mode)
+        return Candidate.make(name, block_m=bm)
+
+    if algorithm == "data_parallel":
+        return Candidate.make("jnp_data_parallel")
+    # paper: 2 jumps per synchronisation round was the measured optimum
+    return Candidate.make("jnp_speculative_gather", jumps_per_round=2)

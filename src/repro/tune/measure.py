@@ -1,0 +1,163 @@
+"""Candidate timing: warmup, synchronised runs, medians.
+
+Timing on an async-dispatch runtime (JAX) needs the discipline the paper
+applies to its CUDA timings: compile/warm the candidate outside the timed
+region, then bracket each timed call with ``jax.block_until_ready`` so host
+timestamps measure device completion, and take the *median* over several
+iterations so one-off scheduling noise doesn't crown the wrong variant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tree_eval.ops import get_variant
+from repro.tune.cache import TuneCache, TuneEntry
+from repro.tune.space import Candidate, WorkloadShape, search_space
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    candidate: Candidate
+    median_ms: float
+    samples_ms: tuple[float, ...]
+
+    @property
+    def failed(self) -> bool:
+        return not self.samples_ms
+
+
+def _median(xs) -> float:
+    xs = sorted(xs)
+    n = len(xs)
+    mid = n // 2
+    return xs[mid] if n % 2 else (xs[mid - 1] + xs[mid]) / 2.0
+
+
+def time_callable(fn, *, warmup: int = 2, iters: int = 5) -> tuple[float, ...]:
+    """Millisecond samples of ``fn()``; each run synchronised on its output."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append((time.perf_counter() - t0) * 1e3)
+    return tuple(samples)
+
+
+def interleaved_samples(
+    fns: dict[str, object], *, warmup: int = 2, iters: int = 7
+) -> dict[str, list[float]]:
+    """Millisecond samples per callable, interleaved round-robin.
+
+    On hosts with drifting load, timing A's iterations and then B's lets the
+    drift masquerade as a real difference; interleaving puts every
+    contender in the same time window, and rotating the within-round order
+    each iteration cancels the warm-cache advantage of running later in a
+    round.  Sample i of each key comes from the same round, so per-round
+    ratios (``a[i]/b[i]``) are drift-free paired statistics.
+    """
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    samples: dict[str, list[float]] = {k: [] for k in fns}
+    keys = list(fns)
+    for i in range(iters):
+        for k in keys[i % len(keys):] + keys[: i % len(keys)]:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[k]())
+            samples[k].append((time.perf_counter() - t0) * 1e3)
+    return samples
+
+
+def interleaved_medians(fns: dict[str, object], *, warmup: int = 2, iters: int = 7) -> dict[str, float]:
+    """Median ms per callable over interleaved samples."""
+    samples = interleaved_samples(fns, warmup=warmup, iters=iters)
+    return {k: _median(v) for k, v in samples.items()}
+
+
+def bucket_pad_records(records: jax.Array, bucket_m: int) -> jax.Array:
+    """Zero-pad the record batch up to the bucket's M (rows past the real M
+    cost the same as real rows, which is exactly what the bucket entry must
+    price in)."""
+    m = records.shape[0]
+    if m == bucket_m:
+        return records
+    return jnp.zeros((bucket_m, records.shape[1]), records.dtype).at[:m].set(records)
+
+
+def measure_candidate(
+    candidate: Candidate,
+    records,
+    enc,
+    *,
+    max_depth: int,
+    warmup: int = 2,
+    iters: int = 5,
+) -> Measurement:
+    """Median wall time of one candidate; a raising candidate measures as ∞."""
+    spec = get_variant(candidate.variant)
+    params = candidate.param_dict
+
+    def run():
+        return spec.fn(records, enc, max_depth=max_depth, **params)
+
+    try:
+        samples = time_callable(run, warmup=warmup, iters=iters)
+    except Exception:
+        return Measurement(candidate, float("inf"), ())
+    return Measurement(candidate, _median(samples), samples)
+
+
+def tune_workload(
+    records,
+    enc,
+    *,
+    cache: TuneCache | None = None,
+    engines: tuple[str, ...] | None = None,
+    warmup: int = 2,
+    iters: int = 5,
+    backend: str | None = None,
+    verbose: bool = False,
+) -> tuple[TuneEntry, list[Measurement]]:
+    """Time every valid candidate for this workload and record the winner.
+
+    Records are zero-padded to the shape bucket's M before timing, so the
+    stored median prices the bucket (what dispatch will actually run), not
+    the un-padded call.  Returns the winning entry (written to ``cache``
+    under the bucket key when a cache is given) plus all measurements.
+    """
+    from repro.core.tree import tree_depth
+
+    backend = backend or jax.default_backend()
+    rec = jnp.asarray(records, jnp.float32)
+    shape = WorkloadShape.of(rec, enc)
+    rec = bucket_pad_records(rec, shape.bucket().m)
+    depth = max(shape.depth, 1)
+
+    measurements = [
+        measure_candidate(c, rec, enc, max_depth=depth, warmup=warmup, iters=iters)
+        for c in search_space(shape, engines=engines)
+    ]
+    ok = [m for m in measurements if not m.failed]
+    if not ok:
+        raise RuntimeError(f"no candidate succeeded for shape {shape}")
+    best = min(ok, key=lambda m: m.median_ms)
+    if verbose:
+        for m in sorted(ok, key=lambda m: m.median_ms):
+            print(f"  {m.median_ms:10.3f} ms  {m.candidate.variant} {m.candidate.param_dict}")
+    entry = TuneEntry(
+        variant=best.candidate.variant,
+        params=best.candidate.param_dict,
+        median_ms=best.median_ms,
+        shape=dataclasses.asdict(shape),
+        backend=backend,
+    )
+    if cache is not None:
+        cache.store(shape.key(backend), entry)
+    return entry, measurements

@@ -1,0 +1,147 @@
+"""Workload shapes, shape bucketing, and the candidate search space.
+
+A *workload shape* is the 4-tuple the paper's §4 runtime model is written
+over: record count M, node count N, attribute count A and tree depth d.
+Candidates are (variant, params) pairs drawn from the kernel variant
+registry (:mod:`repro.kernels.tree_eval.ops`); :func:`search_space`
+enumerates only the candidates that are *valid* for a given shape (e.g. the
+one-hot MXU formulation is excluded when the N² one-hot would blow the
+VMEM/FLOP budget).
+
+Shapes are *bucketed* before they key the cache: M rounds up to a power of
+two, N and A round up to the 128-lane tile the kernels pad to anyway, and
+depth rounds up to the next power of two.  Bucketing trades a little
+optimality near bucket edges for cache hits across the jitter of real
+request sizes — the same reason the serve engine pads waves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+from repro.kernels.tree_eval.ops import (
+    LANE,
+    SUBLANE,
+    VariantSpec,
+    _round_up,
+    choose_block_m,
+    list_variants,
+    on_tpu,
+)
+
+# One-hot speculative candidates materialise an (M, N) matmul against an
+# (A, N) selection matrix; past this node count the matmul work dwarfs the
+# gather it replaces on every backend we model.
+MAX_ONEHOT_NODES = 2048
+
+
+def _next_pow2(x: int) -> int:
+    x = max(int(x), 1)
+    return 1 << (x - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadShape:
+    """The (M, N, A, depth) operating point of one tree-eval call."""
+
+    m: int        # records
+    n_nodes: int  # tree nodes (unpadded)
+    n_attrs: int  # record attributes
+    depth: int    # max root→leaf depth (edges)
+
+    def bucket(self) -> "WorkloadShape":
+        """Quantise to the cache-key granularity (idempotent)."""
+        return WorkloadShape(
+            m=_next_pow2(self.m),
+            n_nodes=_round_up(max(self.n_nodes, 1), LANE),
+            n_attrs=_round_up(max(self.n_attrs, 1), LANE),
+            depth=_next_pow2(self.depth),
+        )
+
+    def key(self, backend: str) -> str:
+        """Stable cache key: backend + bucketed shape."""
+        b = self.bucket()
+        return f"{backend}|M{b.m}|N{b.n_nodes}|A{b.n_attrs}|d{b.depth}"
+
+    @classmethod
+    def of(cls, records, enc, depth: int | None = None) -> "WorkloadShape":
+        import numpy as np
+
+        from repro.core.tree import tree_depth
+
+        shape = np.asarray(records).shape if not hasattr(records, "shape") else records.shape
+        return cls(
+            m=int(shape[0]),
+            n_nodes=int(enc.n_nodes),
+            n_attrs=int(shape[1]),
+            depth=int(depth if depth is not None else max(tree_depth(enc), 1)),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """A concrete (variant, parameter assignment) the tuner can time."""
+
+    variant: str
+    params: tuple[tuple[str, object], ...] = ()
+
+    @property
+    def param_dict(self) -> dict:
+        return dict(self.params)
+
+    @classmethod
+    def make(cls, variant: str, **params) -> "Candidate":
+        return cls(variant=variant, params=tuple(sorted(params.items())))
+
+
+def _block_m_grid(shape: WorkloadShape, jump_mode: str) -> list[int]:
+    """VMEM-model block size plus its power-of-two neighbours."""
+    b = shape.bucket()
+    base = choose_block_m(b.n_nodes, b.n_attrs, jump_mode=jump_mode)
+    grid = {base, max(base // 2, SUBLANE), min(base * 2, 1024)}
+    return sorted(x for x in grid if SUBLANE <= x <= 1024)
+
+
+def _jumps_grid(shape: WorkloadShape) -> list[int]:
+    """Procedure-5 multi-jump factors worth trying (paper found 2 optimal)."""
+    if shape.depth <= 2:
+        return [1]
+    return [1, 2, 3]
+
+
+def default_engines() -> tuple[str, ...]:
+    """Engines worth timing on this backend.
+
+    On TPU the Pallas kernels are the real contenders and the jnp paths are
+    kept for reference; off-TPU the kernels run in interpret mode (orders of
+    magnitude slow, and not what dispatch would ever pick), so only the
+    XLA-compiled jnp variants enter the space.
+    """
+    return ("pallas", "jnp") if on_tpu() else ("jnp",)
+
+
+def variant_valid(spec: VariantSpec, shape: WorkloadShape) -> bool:
+    if spec.jump_mode == "onehot" and shape.n_nodes > MAX_ONEHOT_NODES:
+        return False
+    return True
+
+
+def search_space(
+    shape: WorkloadShape,
+    *,
+    engines: tuple[str, ...] | None = None,
+) -> Iterator[Candidate]:
+    """Enumerate every candidate valid for ``shape``, cheapest-grid first."""
+    engines = default_engines() if engines is None else tuple(engines)
+    for spec in list_variants():
+        if spec.engine not in engines or not variant_valid(spec, shape):
+            continue
+        if "block_m" in spec.tunables:
+            for bm in _block_m_grid(shape, spec.jump_mode):
+                yield Candidate.make(spec.name, block_m=bm)
+        elif "jumps_per_round" in spec.tunables:
+            for j in _jumps_grid(shape):
+                yield Candidate.make(spec.name, jumps_per_round=j)
+        else:
+            yield Candidate.make(spec.name)

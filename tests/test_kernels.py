@@ -8,7 +8,10 @@ to 10, dtypes f32/bf16, both algorithms × both jump modes.
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+# hypothesis is optional: the shim runs a deterministic fixed-example sweep
+# when the real package is not installed (see hypothesis_compat.py).
+from hypothesis_compat import given, settings, st
 
 from repro.core import breadth_first_encode, paper_tree, random_tree, tree_depth
 from repro.kernels.tree_eval import PackedTree, forest_eval, tree_eval, tree_eval_ref

@@ -9,7 +9,9 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+# hypothesis is optional: the shim runs a deterministic fixed-example sweep
+# when the real package is not installed (see hypothesis_compat.py).
+from hypothesis_compat import given, settings, st
 
 from repro.core import (
     BOTTOM,

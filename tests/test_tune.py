@@ -1,0 +1,311 @@
+"""repro.tune: cache round-trip, bucketing, heuristic vs §4 analysis, dispatch.
+
+Dispatch correctness is the load-bearing property: whatever variant the
+tuner or heuristic picks, ``tuned_eval`` must return class assignments
+bit-identical to the branchless serial reference (Procedure 2).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import breadth_first_encode, eval_serial, paper_tree, random_tree
+from repro.core.analysis import CostModel, speculative_wins
+from repro.kernels.tree_eval import VARIANTS, get_variant
+from repro.tune import (
+    Candidate,
+    TuneCache,
+    TuneEntry,
+    TunedEvaluator,
+    WorkloadShape,
+    heuristic_candidate,
+    predicted_times,
+    search_space,
+    tuned_eval,
+    tune_workload,
+)
+
+# hypothesis is optional: the shim runs a deterministic fixed-example sweep
+# when the real package is not installed (see hypothesis_compat.py).
+from hypothesis_compat import given, settings, st
+
+
+def _records(m, a, seed=0):
+    return np.random.default_rng(seed).normal(size=(m, a)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Shape bucketing
+# ---------------------------------------------------------------------------
+
+
+class TestShapeBucketing:
+    def test_bucket_rounds_up(self):
+        b = WorkloadShape(m=100, n_nodes=31, n_attrs=19, depth=11).bucket()
+        assert b == WorkloadShape(m=128, n_nodes=128, n_attrs=128, depth=16)
+
+    def test_bucket_idempotent(self):
+        s = WorkloadShape(m=100, n_nodes=31, n_attrs=19, depth=11)
+        assert s.bucket().bucket() == s.bucket()
+
+    def test_nearby_shapes_share_bucket(self):
+        a = WorkloadShape(m=100, n_nodes=31, n_attrs=19, depth=11)
+        b = WorkloadShape(m=127, n_nodes=40, n_attrs=25, depth=9)
+        assert a.key("cpu") == b.key("cpu")
+
+    def test_distinct_shapes_distinct_keys(self):
+        a = WorkloadShape(m=128, n_nodes=31, n_attrs=19, depth=11)
+        b = WorkloadShape(m=129, n_nodes=31, n_attrs=19, depth=11)  # next pow2
+        assert a.key("cpu") != b.key("cpu")
+        assert a.key("cpu") != a.key("tpu")
+
+    def test_of_derives_from_records_and_tree(self):
+        enc = breadth_first_encode(paper_tree())
+        s = WorkloadShape.of(_records(50, 19), enc)
+        assert s == WorkloadShape(m=50, n_nodes=31, n_attrs=19, depth=11)
+
+
+# ---------------------------------------------------------------------------
+# Search space
+# ---------------------------------------------------------------------------
+
+
+class TestSearchSpace:
+    def test_candidates_only_registered_variants(self):
+        shape = WorkloadShape(m=256, n_nodes=31, n_attrs=19, depth=6)
+        cands = list(search_space(shape))
+        assert cands, "search space must not be empty"
+        for c in cands:
+            assert c.variant in VARIANTS
+            spec = get_variant(c.variant)
+            assert set(c.param_dict) <= set(spec.tunables)
+
+    def test_onehot_excluded_for_huge_trees(self):
+        shape = WorkloadShape(m=256, n_nodes=100_000, n_attrs=19, depth=17)
+        for c in search_space(shape):
+            assert get_variant(c.variant).jump_mode != "onehot"
+
+    def test_engine_filter(self):
+        shape = WorkloadShape(m=256, n_nodes=31, n_attrs=19, depth=6)
+        for c in search_space(shape, engines=("pallas",)):
+            assert get_variant(c.variant).engine == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Cache: write → reload → hit
+# ---------------------------------------------------------------------------
+
+
+class TestCache:
+    def test_round_trip(self, tmp_path):
+        path = tmp_path / "cache.json"
+        cache = TuneCache(path)
+        entry = TuneEntry(
+            variant="jnp_data_parallel", params={}, median_ms=1.25,
+            shape={"m": 128, "n_nodes": 31, "n_attrs": 19, "depth": 11},
+            backend="cpu",
+        )
+        cache.store("cpu|M128|N128|A128|d16", entry)
+        assert path.exists()
+
+        reloaded = TuneCache(path)
+        hit = reloaded.lookup("cpu|M128|N128|A128|d16")
+        assert hit is not None
+        assert hit.variant == entry.variant
+        assert hit.median_ms == entry.median_ms
+        assert hit.shape == entry.shape
+        assert reloaded.lookup("cpu|M999|N128|A128|d16") is None
+
+    def test_params_preserved(self, tmp_path):
+        cache = TuneCache(tmp_path / "c.json")
+        cache.store("k", TuneEntry(variant="jnp_speculative_gather",
+                                   params={"jumps_per_round": 3}, median_ms=0.5))
+        hit = TuneCache(tmp_path / "c.json").lookup("k")
+        assert hit.params == {"jumps_per_round": 3}
+
+    def test_corrupt_file_tolerated(self, tmp_path):
+        path = tmp_path / "c.json"
+        path.write_text("{not json")
+        cache = TuneCache(path)
+        assert len(cache) == 0
+        cache.store("k", TuneEntry(variant="jnp_data_parallel", params={}, median_ms=1.0))
+        assert TuneCache(path).lookup("k") is not None
+
+    def test_version_mismatch_discarded(self, tmp_path):
+        path = tmp_path / "c.json"
+        path.write_text(json.dumps({"version": 999, "entries": {"k": {"variant": "x"}}}))
+        assert TuneCache(path).lookup("k") is None
+
+    def test_lru_front_bounded(self, tmp_path):
+        cache = TuneCache(tmp_path / "c.json", lru_size=2)
+        for i in range(5):
+            cache.store(f"k{i}", TuneEntry(variant="jnp_data_parallel",
+                                           params={}, median_ms=float(i)))
+        assert len(cache._lru) <= 2
+        # evicted keys still resolve from the table
+        assert cache.lookup("k0").median_ms == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Heuristic fallback vs the §4 analysis
+# ---------------------------------------------------------------------------
+
+
+class TestHeuristic:
+    def test_model_choice_matches_crossover(self):
+        """With t_e = t_c and no overheads, the model-predicted winner must
+        flip exactly at equation (1): p < 2·d_µ/(1 + log₂ d_µ)."""
+        cm = CostModel(t_e=1.0, t_c=1.0, t_i=0.0, sigma=0.0, gamma=0.0)
+        shape = WorkloadShape(m=1024, n_nodes=31, n_attrs=19, depth=8)
+        for d_mu in (2.0, 4.0, 8.0, 16.0, 32.0):
+            for p_factor in (0.5, 0.9, 1.1, 2.0):
+                from repro.core.analysis import crossover_group_size
+
+                p = crossover_group_size(d_mu) * p_factor
+                times = predicted_times(shape, cm=cm, d_mu=d_mu, p_group=p)
+                model_says_spec = times["speculative"] < times["data_parallel"]
+                assert model_says_spec == speculative_wins(d_mu, p), (d_mu, p)
+
+    def test_heuristic_follows_synthetic_timings(self):
+        """Feeding the cost model synthetic operating points drives the
+        candidate's algorithm exactly as the analysis predicts."""
+        cm = CostModel(t_e=1.0, t_c=1.0)
+        shape = WorkloadShape(m=512, n_nodes=31, n_attrs=19, depth=8)
+        # tiny record groups, deep traversals -> speculative wins
+        c_spec = heuristic_candidate(shape, cm=cm, d_mu=30.0, p_group=2.0)
+        assert get_variant(c_spec.variant).algorithm == "speculative"
+        # huge groups, shallow traversals -> data decomposition wins
+        c_dp = heuristic_candidate(shape, cm=cm, d_mu=2.0, p_group=500.0)
+        assert get_variant(c_dp.variant).algorithm == "data_parallel"
+
+    def test_heuristic_yields_valid_candidate(self):
+        for depth, n in ((2, 7), (11, 31), (8, 511)):
+            shape = WorkloadShape(m=256, n_nodes=n, n_attrs=19, depth=depth)
+            c = heuristic_candidate(shape)
+            spec = get_variant(c.variant)
+            assert set(c.param_dict) <= set(spec.tunables)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch correctness: bit-identical to the serial reference
+# ---------------------------------------------------------------------------
+
+
+class TestDispatch:
+    def test_heuristic_path_bit_identical(self, tmp_path):
+        cache = TuneCache(tmp_path / "c.json")
+        enc = breadth_first_encode(paper_tree())
+        rec = _records(300, 19, seed=3)
+        out = np.asarray(tuned_eval(rec, enc, cache=cache))
+        assert out.dtype == np.int32
+        assert np.array_equal(out, eval_serial(enc, rec))
+
+    @given(
+        seed=st.integers(0, 40),
+        depth=st.integers(1, 9),
+        balance=st.floats(0.3, 1.0),
+        m=st.integers(1, 150),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_randomized_trees_bit_identical(self, seed, depth, balance, m):
+        enc = breadth_first_encode(
+            random_tree(n_attrs=7, n_classes=5, max_depth=depth, seed=seed, balance=balance)
+        )
+        import tempfile
+        from pathlib import Path
+
+        rec = _records(m, 7, seed=seed + 1)
+        cache = TuneCache(Path(tempfile.gettempdir()) / "repro_tune_test_absent.json")
+        out = np.asarray(tuned_eval(rec, enc, cache=cache))
+        assert np.array_equal(out, eval_serial(enc, rec))
+
+    def test_autotuned_path_bit_identical_and_cached(self, tmp_path):
+        cache = TuneCache(tmp_path / "c.json")
+        enc = breadth_first_encode(
+            random_tree(n_attrs=5, n_classes=4, max_depth=5, seed=7)
+        )
+        rec = _records(64, 5, seed=8)
+        ev = TunedEvaluator(enc, cache=cache, autotune=True,
+                            measure_kw={"warmup": 1, "iters": 2})
+        out = np.asarray(ev(rec))
+        assert np.array_equal(out, eval_serial(enc, rec))
+        assert len(cache) == 1  # winner persisted under the bucket key
+
+        # a fresh evaluator on a fresh cache handle must hit, not re-tune
+        ev2 = TunedEvaluator(enc, cache=TuneCache(tmp_path / "c.json"))
+        _, source = ev2.resolve(rec)
+        assert source == "cache"
+        assert np.array_equal(np.asarray(ev2(rec)), eval_serial(enc, rec))
+
+    def test_tune_workload_winner_is_measured_minimum(self, tmp_path):
+        cache = TuneCache(tmp_path / "c.json")
+        enc = breadth_first_encode(paper_tree())
+        rec = _records(32, 19, seed=9)
+        entry, measurements = tune_workload(rec, enc, cache=cache, warmup=1, iters=2)
+        ok = [m for m in measurements if not m.failed]
+        assert entry.median_ms == min(m.median_ms for m in ok)
+        assert entry.variant in VARIANTS
+
+    def test_dispatch_stale_cache_variant_falls_back(self, tmp_path):
+        """An entry naming a since-removed variant must not break dispatch."""
+        cache = TuneCache(tmp_path / "c.json")
+        enc = breadth_first_encode(paper_tree())
+        rec = _records(40, 19, seed=10)
+        key = WorkloadShape.of(rec, enc).key(__import__("jax").default_backend())
+        cache.store(key, TuneEntry(variant="gone_variant", params={}, median_ms=1.0))
+        ev = TunedEvaluator(enc, cache=cache)
+        cand, source = ev.resolve(rec)
+        assert source == "heuristic"
+        assert np.array_equal(np.asarray(ev(rec)), eval_serial(enc, rec))
+
+    def test_memo_source_on_second_resolve(self, tmp_path):
+        enc = breadth_first_encode(paper_tree())
+        rec = _records(16, 19)
+        ev = TunedEvaluator(enc, cache=TuneCache(tmp_path / "c.json"))
+        assert ev.resolve(rec)[1] == "heuristic"
+        assert ev.resolve(rec)[1] == "memo"
+
+    def test_explicit_candidate_params_respected(self):
+        c = Candidate.make("jnp_speculative_gather", jumps_per_round=3)
+        assert c.param_dict == {"jumps_per_round": 3}
+        # frozen/hashable: usable as dict keys in resolution memos
+        assert hash(c) == hash(Candidate.make("jnp_speculative_gather", jumps_per_round=3))
+
+
+# ---------------------------------------------------------------------------
+# Tuned forest + serving wiring
+# ---------------------------------------------------------------------------
+
+
+class TestWiring:
+    def test_eval_forest_tuned_matches_serial(self, tmp_path):
+        from repro.core import EncodedForest, eval_forest_tuned
+
+        trees = [
+            breadth_first_encode(random_tree(n_attrs=9, n_classes=6, max_depth=d, seed=d))
+            for d in (2, 5, 8)
+        ]
+        forest = EncodedForest(trees)
+        rec = _records(120, 9, seed=11)
+        out = np.asarray(eval_forest_tuned(forest, rec, cache=TuneCache(tmp_path / "c.json")))
+        assert out.shape == (3, 120)
+        for i in range(3):
+            assert np.array_equal(out[i], eval_serial(forest.tree(i), rec))
+
+    def test_tree_serve_engine_waves(self, tmp_path):
+        from repro.serve import TreeRequest, TreeServeEngine
+
+        enc = breadth_first_encode(paper_tree())
+        rng = np.random.default_rng(12)
+        reqs = [
+            TreeRequest(uid=i, records=rng.normal(size=(int(rng.integers(1, 100)), 19)).astype(np.float32))
+            for i in range(9)
+        ]
+        eng = TreeServeEngine(enc, max_batch=256, cache=TuneCache(tmp_path / "c.json"))
+        eng.run(reqs)
+        assert eng.stats.waves >= 2
+        assert eng.stats.records == sum(r.records.shape[0] for r in reqs)
+        for r in reqs:
+            assert r.done
+            assert np.array_equal(r.out, eval_serial(enc, r.records))
