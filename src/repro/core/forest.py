@@ -112,6 +112,39 @@ def eval_forest_tuned(
     return jnp.stack(outs)
 
 
+def eval_forest_sharded(
+    forest: "EncodedForest | Sequence[EncodedTree]",
+    records,
+    *,
+    mesh=None,
+    plan=None,
+    decomposition: str | None = None,
+    cache=None,
+    autotune: bool = False,
+    engines: tuple[str, ...] | None = None,
+) -> jax.Array:
+    """Per-tree class assignments, shape (T, M), across the device mesh.
+
+    The :mod:`repro.dist` planner picks a record-/tree-/hybrid-sharded
+    decomposition (or honours an explicit ``plan``/``mesh``/
+    ``decomposition``), the executor lowers it with ``shard_map``, and each
+    shard's kernel is still selected through ``repro.tune``.  Exact: results
+    bit-match :func:`eval_forest_tuned` for every plan; on a single device
+    this *is* the plain tuned path (no ``shard_map`` overhead).
+    """
+    from repro.dist import ShardedForestEvaluator
+
+    return ShardedForestEvaluator(
+        forest,
+        mesh=mesh,
+        plan=plan,
+        decomposition=decomposition,
+        cache=cache,
+        autotune=autotune,
+        engines=engines,
+    )(records)
+
+
 def majority_vote(per_tree: jax.Array, n_classes: int) -> jax.Array:
     """(T, M) per-tree classes → (M,) majority class."""
     onehot = jax.nn.one_hot(per_tree, n_classes, dtype=jnp.int32)  # (T, M, C)

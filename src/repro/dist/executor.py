@@ -1,0 +1,255 @@
+"""Multi-device executor: lower a ShardPlan over a (records × trees) mesh.
+
+Lowering maps the planner's symbols onto ``shard_map``:
+
+  R = plan.record_shards → mesh axis ``"records"``: each device column holds
+      M/R records — Procedure 3's ``D[m·p .. m(p+1))`` slicing at mesh level.
+  G = plan.tree_shards   → mesh axis ``"trees"``: each device row holds T/G
+      stacked tree encodings (the forest analogue of the paper's replicated
+      constant-memory tree).
+  per-shard kernel       → resolved through :class:`repro.tune.TunedEvaluator`
+      at the *shard* shape (M/R, N, A, d), so the autotuner stays the single
+      selection point; the winning candidate's (algorithm, jump mode, jump
+      count) lowers via its array-level formulation
+      (:func:`repro.core.eval_speculative.eval_speculative` /
+      :func:`repro.core.eval_dataparallel.eval_data_parallel`) inside the
+      shard body, vmapped over the local tree axis.
+
+Padding follows the divisibility policy of :mod:`repro.parallel.sharding`:
+records pad to a multiple of R with zero rows (sliced off the output), trees
+pad to a multiple of G by repeating tree 0 (rows discarded) — both are the
+§3.2 phantom-node trick applied to the mesh axes.  All variants are exact,
+so any plan returns results bit-identical to ``eval_forest_tuned``; on a
+single device the executor *is* ``eval_forest_tuned`` (no ``shard_map`` in
+the path at all).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.eval_dataparallel import eval_data_parallel
+from repro.core.eval_speculative import eval_speculative
+from repro.core.forest import EncodedForest
+from repro.dist.plan import ForestWorkload, MeshCostModel, ShardPlan, make_plan, plan_forest
+from repro.kernels.tree_eval.ops import get_variant
+from repro.parallel import sharding as shd
+from repro.parallel.sharding import SHARD_MAP_KW as _SMAP_KW
+from repro.parallel.sharding import shard_map as _shard_map
+
+
+@dataclasses.dataclass
+class DistStats:
+    calls: int = 0
+    records: int = 0
+    resolve_source: str = ""    # where the shard kernel came from (tune provenance)
+
+
+class ShardedForestEvaluator:
+    """Reusable sharded dispatcher for one encoded forest.
+
+    Planning is lazy: the first batch supplies M and a d_µ sample, the
+    planner picks (R, G) (unless ``plan``/``mesh``/``decomposition`` pins
+    it), and subsequent equal-shaped calls replay one jitted ``shard_map``
+    program.  ``__call__`` never blocks on the device — callers (stream
+    chunker, serve engine, benches) own synchronisation, which is what lets
+    transfer overlap evaluation.
+    """
+
+    def __init__(
+        self,
+        forest: "EncodedForest | list",
+        *,
+        mesh=None,
+        plan: ShardPlan | None = None,
+        decomposition: str | None = None,
+        n_devices: int | None = None,
+        mesh_cost: MeshCostModel | None = None,
+        cache=None,
+        autotune: bool = False,
+        engines: tuple[str, ...] | None = None,
+    ):
+        from repro.tune import TuneCache
+
+        self.forest = forest if isinstance(forest, EncodedForest) else EncodedForest(list(forest))
+        self.cache = cache if cache is not None else TuneCache()  # one handle, one disk read
+        self.autotune = autotune
+        self.engines = engines
+        self.mesh_cost = mesh_cost if mesh_cost is not None else MeshCostModel()
+        self.decomposition = decomposition
+        self._given_mesh = mesh
+        self._given_plan = plan
+        self._n_devices = n_devices
+        self.plan: ShardPlan | None = None
+        self.mesh = None
+        self.record_sharding = None   # set once planned; the chunker device_puts with it
+        self.resolved = None          # (Candidate, source) provenance
+        self.stats = DistStats()
+        self._fast: dict[int, tuple] = {}   # M → (fn, m_pad, t_pad, tree_args)
+        self._single_evs: list | None = None  # 1-device path: per-tree evaluators
+
+    # -- planning -----------------------------------------------------------
+
+    def _measured_d_mu(self, rec: np.ndarray, sample: int = 128) -> float:
+        """Forest d_µ: measured mean over a few trees × a record sample."""
+        from repro.tune.heuristic import measured_d_mu
+
+        sub = rec[:sample]
+        trees = range(min(self.forest.n_trees, 4))
+        return float(np.mean([measured_d_mu(self.forest.tree(i), sub) for i in trees]))
+
+    def _prepare(self, rec) -> None:
+        if self.plan is not None:
+            return
+        if self._given_plan is not None:
+            self.plan = self._given_plan
+        elif self._given_mesh is not None:
+            sizes = dict(zip(self._given_mesh.axis_names, self._given_mesh.devices.shape))
+            wl = ForestWorkload.of(self.forest, rec)
+            self.plan = make_plan(
+                wl, sizes.get("records", 1), sizes.get("trees", 1), self.mesh_cost
+            )
+        else:
+            host = np.asarray(rec)
+            wl = ForestWorkload.of(self.forest, host, d_mu=self._measured_d_mu(host))
+            self.plan = plan_forest(
+                wl,
+                n_devices=self._n_devices,
+                mesh_cost=self.mesh_cost,
+                decomposition=self.decomposition,
+            )
+        if self.plan.n_devices > 1:
+            self.mesh = self._given_mesh if self._given_mesh is not None else shd.forest_mesh(
+                self.plan.record_shards, self.plan.tree_shards
+            )
+            self.record_sharding = shd.named(self.mesh, P("records", None))
+
+    # -- lowering -----------------------------------------------------------
+
+    def _shard_kernel(self, m_shard: int, n_attrs: int, rec_host: np.ndarray):
+        """Resolve the per-shard kernel through repro.tune; return array fn.
+
+        The TunedEvaluator sees a representative shard-shaped sample, so its
+        memo/cache/autotune/heuristic chain answers for the shape the device
+        actually runs.  The candidate's algorithm, jump mode and jump count
+        lower via the array-level evaluators (a Pallas winner lowers via its
+        algorithm's jnp formulation — the kernel launch itself is per-device
+        work that ``shard_map`` bodies express as plain traced ops).
+        """
+        from repro.tune import TunedEvaluator
+
+        sample = np.zeros((m_shard, n_attrs), np.float32)
+        rows = min(rec_host.shape[0], m_shard)
+        sample[:rows] = rec_host[:rows]
+        ev = TunedEvaluator(
+            self.forest.tree(0),
+            cache=self.cache,
+            autotune=self.autotune,
+            engines=self.engines,
+        )
+        ev.depth = max(int(self.forest.max_depth), 1)
+        cand, source = ev.resolve(sample)
+        self.resolved = (cand, source)
+        self.stats.resolve_source = source
+
+        spec = get_variant(cand.variant)
+        params = cand.param_dict
+        depth = max(int(self.forest.max_depth), 1)
+        if spec.algorithm == "data_parallel":
+            return partial(eval_data_parallel, max_depth=depth)
+        return partial(
+            eval_speculative,
+            max_depth=depth,
+            jumps_per_round=int(params.get("jumps_per_round", 2)),
+            use_onehot_matmul=(spec.jump_mode == "onehot"),
+        )
+
+    def _build(self, m: int, n_attrs: int, rec_host: np.ndarray) -> tuple:
+        plan, mesh, forest = self.plan, self.mesh, self.forest
+        m_pad = shd.pad_to_multiple(max(m, plan.record_shards), plan.record_shards)
+        t_pad = shd.pad_to_multiple(forest.n_trees, plan.tree_shards)
+
+        def pad_t(x, dtype):
+            x = np.asarray(x)
+            if t_pad > x.shape[0]:
+                x = np.concatenate([x, np.repeat(x[:1], t_pad - x.shape[0], axis=0)])
+            return jax.device_put(
+                jnp.asarray(x, dtype), shd.named(mesh, P("trees", None))
+            )
+
+        tree_args = (
+            pad_t(forest.attr_idx, jnp.int32),
+            pad_t(forest.threshold, jnp.float32),
+            pad_t(forest.child, jnp.int32),
+            pad_t(forest.class_val, jnp.int32),
+        )
+        kern = self._shard_kernel(m_pad // plan.record_shards, n_attrs, rec_host)
+
+        def body(r, ai, ti, ci, ki):
+            # r: (M/R, A) local records; tree tables: (T/G, N) local stack
+            return jax.vmap(lambda a_, t_, c_, k_: kern(r, a_, t_, c_, k_))(ai, ti, ci, ki)
+
+        fn = jax.jit(
+            _shard_map(
+                body,
+                mesh=mesh,
+                in_specs=(
+                    P("records", None),
+                    P("trees", None),
+                    P("trees", None),
+                    P("trees", None),
+                    P("trees", None),
+                ),
+                out_specs=P("trees", "records"),
+                **_SMAP_KW,
+            )
+        )
+        return fn, m_pad, t_pad, tree_args
+
+    # -- evaluation ---------------------------------------------------------
+
+    def __call__(self, records) -> jax.Array:
+        """Per-tree class assignments, shape (T, M); async (not blocked)."""
+        if not (isinstance(records, jax.Array) and records.dtype == jnp.float32):
+            records = jnp.asarray(records, jnp.float32)
+        self._prepare(records)
+        m = records.shape[0]
+        self.stats.calls += 1
+        self.stats.records += int(m)
+
+        if self.plan.n_devices == 1:
+            # single-device fallback: the plain tuned path, no shard_map.
+            # Per-tree TunedEvaluators are built once — their internal memo
+            # makes steady-state calls (serve waves, stream chunks) pure
+            # dict probes, same as eval_forest_tuned with a reused cache.
+            if self._single_evs is None:
+                from repro.tune import TunedEvaluator
+
+                self._single_evs = [
+                    TunedEvaluator(
+                        self.forest.tree(i),
+                        cache=self.cache, autotune=self.autotune, engines=self.engines,
+                    )
+                    for i in range(self.forest.n_trees)
+                ]
+            return jnp.stack([ev(records) for ev in self._single_evs])
+
+        fast = self._fast.get(m)
+        if fast is None:
+            fast = self._build(m, int(records.shape[1]), np.asarray(records))
+            self._fast[m] = fast
+        fn, m_pad, t_pad, tree_args = fast
+        padded = (
+            records
+            if m_pad == m
+            else jnp.zeros((m_pad, records.shape[1]), records.dtype).at[:m].set(records)
+        )
+        padded = jax.device_put(padded, self.record_sharding)
+        out = fn(padded, *tree_args)   # (t_pad, m_pad)
+        return out[: self.forest.n_trees, :m]

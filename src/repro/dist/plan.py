@@ -1,0 +1,241 @@
+"""Decomposition planner: the §3.6 runtime model lifted to a device mesh.
+
+The paper's analysis is a two-way contest on one SIMD engine — data
+decomposition (Procedure 3, T₃) vs speculative decomposition (Procedure 5,
+T₅) over M records of mean traversal depth d_µ.  At fleet scale the decision
+gains a dimension: D devices can shard the *records* (each device evaluates
+every tree over M/R records), the *trees* (each device evaluates T/G trees
+over all records), or both (an R×G grid).  This module extends the closed
+forms of :mod:`repro.core.analysis` with the mesh-level terms and picks the
+factorization with the smallest predicted time.
+
+Symbol map (planner term → §3.6 symbol):
+
+  ``ForestWorkload.m``        → M   (record count)
+  ``ForestWorkload.d_mu``     → d_µ (mean traversal depth; measured when the
+                                executor has a batch sample, else the
+                                geometry prior of ``tune.heuristic``)
+  ``MeshCostModel.cm``        → t_e, t_c, t_i, σ, γ (per-engine constants)
+  ``MeshCostModel.p_device``  → P   (processors *within* one device — the
+                                SIMD lanes T₃/T₅ divide work over)
+  ``ShardPlan.record_shards`` → R   (mesh extent of the M/R data slicing,
+                                Procedure 3's ``D[m·p .. m(p+1))`` lifted
+                                across devices)
+  ``ShardPlan.tree_shards``   → G   (mesh extent over the forest; §3.6 is
+                                single-tree, so T/G multiplies the per-tree
+                                form instead of appearing inside it)
+  ``MeshCostModel.sigma_*``   → σ   (t_s(M) = σ·M + γ transmission slopes,
+                                split per operand: records in, tree tables
+                                in, class assignments out)
+  ``MeshCostModel.gamma_launch`` → γ + t_i (per-plan dispatch overhead)
+
+Per-tree kernel time inside a device comes from
+:func:`repro.tune.heuristic.predicted_times` — the same T₃/T₅ evaluation
+dispatch uses — so the planner and the autotuner read one model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.analysis import CostModel
+
+
+@dataclasses.dataclass(frozen=True)
+class ForestWorkload:
+    """The (M, T, N, A, d, d_µ) operating point of one forest evaluation."""
+
+    m: int          # M: records
+    n_trees: int    # T: trees in the forest
+    n_nodes: int    # N: nodes per (padded) tree
+    n_attrs: int    # A: record attributes
+    depth: int      # max root→leaf depth over the forest (edges)
+    d_mu: float     # mean traversal depth (measured or prior)
+
+    @classmethod
+    def of(cls, forest, records, *, d_mu: float | None = None) -> "ForestWorkload":
+        """Derive the workload from an EncodedForest + record batch.
+
+        ``d_mu`` defaults to the geometry prior (§3.6: between log₂ N and
+        depth); the executor passes a measured value when it has records.
+        """
+        import numpy as np
+
+        from repro.tune.heuristic import default_d_mu
+        from repro.tune.space import WorkloadShape
+
+        shape = records.shape if hasattr(records, "shape") else np.asarray(records).shape
+        depth = max(int(forest.max_depth), 1)
+        if d_mu is None:
+            d_mu = default_d_mu(
+                WorkloadShape(m=int(shape[0]), n_nodes=int(forest.n_nodes),
+                              n_attrs=int(shape[1]), depth=depth)
+            )
+        return cls(
+            m=int(shape[0]),
+            n_trees=int(forest.n_trees),
+            n_nodes=int(forest.n_nodes),
+            n_attrs=int(shape[1]),
+            depth=depth,
+            d_mu=max(float(d_mu), 1.0),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCostModel:
+    """§3.6 constants plus the mesh-level transmission/overhead terms.
+
+    Defaults are in node-evaluation units (t_e = t_c = 1, the paper's
+    normalization): a record element costs ~5% of a node evaluation to move,
+    and one dispatch costs ~50 node evaluations.  Absolute values only matter
+    relatively — the planner ranks factorizations, it does not predict
+    milliseconds.
+    """
+
+    cm: CostModel = CostModel(t_e=1.0, t_c=1.0)
+    p_device: float = 128.0    # P per device: the 128-lane SIMD width
+    sigma_rec: float = 0.05    # σ per record element scattered to a device
+    sigma_tree: float = 0.05   # σ per tree-table element broadcast to a device
+    sigma_out: float = 0.05    # σ per class assignment gathered back
+    gamma_launch: float = 50.0 # γ + t_i: per-plan dispatch overhead
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """One (R, G) factorization with its model-predicted cost.
+
+    ``algorithm`` is the §3.6 winner *within* a device shard (the same
+    choice ``repro.tune``'s heuristic would make at the shard shape), kept
+    for provenance — actual kernel selection happens through the tune cache
+    at execution time.
+    """
+
+    record_shards: int          # R
+    tree_shards: int            # G
+    algorithm: str              # 'speculative' | 'data_parallel' (per-shard T₅ vs T₃)
+    predicted: float            # model time units (rank-valid, not ms)
+
+    @property
+    def n_devices(self) -> int:
+        return self.record_shards * self.tree_shards
+
+    @property
+    def decomposition(self) -> str:
+        r, g = self.record_shards > 1, self.tree_shards > 1
+        if r and g:
+            return "hybrid"
+        if r:
+            return "records"
+        if g:
+            return "trees"
+        return "single"
+
+
+def shard_extents(wl: ForestWorkload, record_shards: int, tree_shards: int) -> tuple[int, int]:
+    """(records, trees) held by each device, after divisibility padding."""
+    return (
+        math.ceil(max(wl.m, 1) / record_shards),
+        math.ceil(wl.n_trees / tree_shards),
+    )
+
+
+def predicted_plan_time(
+    wl: ForestWorkload,
+    record_shards: int,
+    tree_shards: int,
+    mesh_cost: MeshCostModel = MeshCostModel(),
+) -> tuple[float, str]:
+    """Model time of the (R, G) factorization; returns (time, algorithm).
+
+    Devices run concurrently, so the plan costs what one device pays:
+
+        T(R, G) = (T/G) · min(T₃, T₅)(M/R; P_dev)          compute
+                + σ_rec·(M/R)·A + σ_tree·(T/G)·4N          operand scatter
+                + σ_out·(T/G)·(M/R)                        result gather
+                + γ_launch                                 dispatch
+
+    with T₃/T₅ evaluated by ``repro.tune.heuristic.predicted_times`` at the
+    shard operating point (same closed forms dispatch uses).
+    """
+    from repro.tune.heuristic import predicted_times
+    from repro.tune.space import WorkloadShape
+
+    m_shard, t_shard = shard_extents(wl, record_shards, tree_shards)
+    shape = WorkloadShape(m=m_shard, n_nodes=wl.n_nodes, n_attrs=wl.n_attrs, depth=wl.depth)
+    times = predicted_times(shape, cm=mesh_cost.cm, d_mu=wl.d_mu, p_total=mesh_cost.p_device)
+    algorithm = min(times, key=times.get)
+    compute = t_shard * times[algorithm]
+    scatter = (
+        mesh_cost.sigma_rec * m_shard * wl.n_attrs
+        + mesh_cost.sigma_tree * t_shard * 4 * wl.n_nodes  # 4 tables per tree
+    )
+    gather = mesh_cost.sigma_out * t_shard * m_shard
+    return compute + scatter + gather + mesh_cost.gamma_launch, algorithm
+
+
+def make_plan(
+    wl: ForestWorkload,
+    record_shards: int,
+    tree_shards: int,
+    mesh_cost: MeshCostModel = MeshCostModel(),
+) -> ShardPlan:
+    """An explicit (R, G) plan with its predicted cost filled in."""
+    t, alg = predicted_plan_time(wl, record_shards, tree_shards, mesh_cost)
+    return ShardPlan(record_shards=record_shards, tree_shards=tree_shards,
+                     algorithm=alg, predicted=t)
+
+
+def enumerate_plans(
+    wl: ForestWorkload,
+    n_devices: int,
+    mesh_cost: MeshCostModel = MeshCostModel(),
+) -> list[ShardPlan]:
+    """Every feasible (R, G) factorization with R·G ≤ D, costed.
+
+    Feasibility: no more record shards than records, no more tree shards
+    than trees (an idle shard is never predicted-cheaper, but a plan may
+    legitimately leave devices idle when the workload is too small to fill
+    them).  The degenerate (1, 1) plan is always present.
+    """
+    out: dict[tuple[int, int], ShardPlan] = {}
+    for r in range(1, n_devices + 1):
+        if r > max(wl.m, 1):
+            continue
+        for g in range(1, n_devices // r + 1):
+            if g > wl.n_trees:
+                continue
+            out[(r, g)] = make_plan(wl, r, g, mesh_cost)
+    if (1, 1) not in out:
+        out[(1, 1)] = make_plan(wl, 1, 1, mesh_cost)
+    return sorted(out.values(), key=lambda p: (p.predicted, -p.record_shards, p.tree_shards))
+
+
+def plan_forest(
+    wl: ForestWorkload,
+    n_devices: int | None = None,
+    *,
+    mesh_cost: MeshCostModel = MeshCostModel(),
+    decomposition: str | None = None,
+) -> ShardPlan:
+    """Choose the cheapest predicted factorization for this workload.
+
+    ``decomposition`` forces the family ('records' | 'trees' | 'hybrid') —
+    used by the crossover bench and by callers that must match an existing
+    mesh.  Ties break toward more record shards (replication-free operands).
+    On one device the plan degrades to (1, 1) and the executor runs the
+    plain tuned path with no ``shard_map``.
+    """
+    import jax
+
+    if n_devices is None:
+        n_devices = jax.device_count()
+    plans = enumerate_plans(wl, n_devices, mesh_cost)
+    if decomposition is not None:
+        wanted = [p for p in plans if p.decomposition == decomposition]
+        if not wanted:
+            raise ValueError(
+                f"no feasible {decomposition!r} plan for {wl} on {n_devices} devices"
+            )
+        plans = wanted
+    return plans[0]

@@ -71,14 +71,8 @@ def cross_pod_compressed_mean(mesh, grads, err, specs):
     instead arrange the loss to mean over ('data',) only and do the pod-axis
     reduction here explicitly with shard_map.  Returns (mean_grads, new_err).
     """
-    try:  # jax >= 0.6 top-level API
-        from jax import shard_map
-
-        smap_kw = {"check_vma": False}
-    except ImportError:  # jax 0.4.x
-        from jax.experimental.shard_map import shard_map
-
-        smap_kw = {"check_rep": False}
+    from repro.parallel.sharding import SHARD_MAP_KW as smap_kw
+    from repro.parallel.sharding import shard_map
 
     n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
     if n_pods == 1:

@@ -20,6 +20,15 @@ from typing import Optional, Sequence
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.6 top-level API
+    from jax import shard_map
+
+    SHARD_MAP_KW = {"check_vma": False}
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401 (re-exported)
+
+    SHARD_MAP_KW = {"check_rep": False}
+
 
 @dataclasses.dataclass(frozen=True)
 class MeshAxes:
@@ -127,10 +136,38 @@ def constrain(x, spec: P):
         return x
 
 
+def pad_to_multiple(dim: int, size: int) -> int:
+    """Round ``dim`` up to a multiple of ``size`` (the divisibility policy's
+    other arm: when a dimension *must* shard, pad it dense instead of
+    replicating — vocab padding and the dist executor's record/tree padding
+    both go through here)."""
+    if size <= 1:
+        return dim
+    return ((dim + size - 1) // size) * size
+
+
 def pad_vocab(vocab: int, axes: MeshAxes, lane: int = 128) -> int:
     """Pad the vocabulary so it shards densely: multiple of lane·|model|."""
-    mult = lane * (axes.model_size if axes.tp else 1)
-    return ((vocab + mult - 1) // mult) * mult
+    return pad_to_multiple(vocab, lane * (axes.model_size if axes.tp else 1))
+
+
+def forest_mesh(record_shards: int, tree_shards: int, devices=None) -> Mesh:
+    """(records × trees) mesh over the first R·G devices.
+
+    The ``repro.dist`` layout: axis ``"records"`` carries the data
+    decomposition (the §3.6 M/P slicing lifted to devices), axis ``"trees"``
+    carries the forest.  Plans may use fewer devices than the host exposes
+    (a feasibility-clamped plan on a small workload), so this builds the
+    mesh explicitly rather than via ``jax.make_mesh``.
+    """
+    import numpy as np
+
+    devs = list(devices) if devices is not None else jax.devices()
+    need = record_shards * tree_shards
+    if need > len(devs):
+        raise ValueError(f"plan needs {need} devices, host has {len(devs)}")
+    grid = np.array(devs[:need], dtype=object).reshape(record_shards, tree_shards)
+    return Mesh(grid, ("records", "trees"))
 
 
 def named(mesh: Mesh, spec: P) -> NamedSharding:

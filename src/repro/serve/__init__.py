@@ -1,5 +1,7 @@
 from repro.serve.engine import (
     EngineStats,
+    ForestEngineStats,
+    ForestServeEngine,
     Request,
     ServeEngine,
     TreeEngineStats,

@@ -133,6 +133,19 @@ class TreeRequest:
     done: bool = False
 
 
+def _next_wave(queue: deque, max_batch: int) -> tuple[list, int]:
+    """Pop the next record-count-bounded wave off the request queue.
+
+    Greedy prefix up to ``max_batch`` total records; an oversize request
+    forms a singleton wave (it cannot split across waves)."""
+    wave, total = [], 0
+    while queue and (not wave or total + queue[0].records.shape[0] <= max_batch):
+        r = queue.popleft()
+        wave.append(r)
+        total += r.records.shape[0]
+    return wave, total
+
+
 @dataclasses.dataclass
 class TreeEngineStats:
     waves: int = 0
@@ -169,12 +182,7 @@ class TreeServeEngine:
         """Serve all requests in record-count-bounded waves."""
         queue = deque(requests)
         while queue:
-            wave, total = [], 0
-            while queue and (not wave or total + queue[0].records.shape[0] <= self.max_batch):
-                r = queue.popleft()
-                wave.append(r)
-                total += r.records.shape[0]
-            self._run_wave(wave, total)
+            self._run_wave(*_next_wave(queue, self.max_batch))
         return requests
 
     def _run_wave(self, wave: list[TreeRequest], total: int) -> None:
@@ -190,5 +198,85 @@ class TreeServeEngine:
         for r in wave:
             m = r.records.shape[0]
             r.out = out[off:off + m]
+            r.done = True
+            off += m
+
+
+# ---------------------------------------------------------------------------
+# Sharded-forest serving (repro.dist as a service)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ForestEngineStats:
+    waves: int = 0
+    records: int = 0
+    chunks: int = 0                # streaming chunks across all waves
+    eval_s: float = 0.0
+    chunk_ms: list = dataclasses.field(default_factory=list)  # per-chunk latency
+
+
+class ForestServeEngine:
+    """Wave-batched forest classification over the device mesh.
+
+    The forest analogue of :class:`TreeServeEngine`: requests coalesce into
+    waves of up to ``max_batch`` records, each wave runs through the
+    ``repro.dist`` sharded executor behind a streaming chunker, so
+    host→device transfer of one chunk overlaps evaluation of the previous
+    (double buffering).  Per-chunk latencies land in ``stats.chunk_ms`` —
+    the same accounting ``TreeServeEngine`` keeps per wave, at chunk
+    granularity.  With ``n_classes`` set, requests get majority-vote
+    classes (m,); otherwise per-tree assignments (T, m).
+    """
+
+    def __init__(self, forest, *, max_batch: int = 65536, chunk_records: int = 8192,
+                 n_classes: Optional[int] = None, mesh=None, plan=None,
+                 decomposition=None, cache=None, autotune: bool = False, engines=None):
+        from repro.dist import ShardedForestEvaluator, StreamingChunker
+
+        self._eval = ShardedForestEvaluator(
+            forest, mesh=mesh, plan=plan, decomposition=decomposition,
+            cache=cache, autotune=autotune, engines=engines,
+        )
+        self._chunker = StreamingChunker(self._eval, chunk_records=chunk_records)
+        self.forest = self._eval.forest
+        self.max_batch = max_batch
+        self.n_classes = n_classes
+        self.stats = ForestEngineStats()
+
+    @property
+    def plan(self):
+        """The executor's chosen ShardPlan (None until the first wave)."""
+        return self._eval.plan
+
+    def run(self, requests: list[TreeRequest]) -> list[TreeRequest]:
+        """Serve all requests in record-count-bounded waves."""
+        queue = deque(requests)
+        while queue:
+            self._run_wave(*_next_wave(queue, self.max_batch))
+        return requests
+
+    def _run_wave(self, wave: list[TreeRequest], total: int) -> None:
+        self.stats.waves += 1
+        self.stats.records += total
+        batch = np.concatenate([r.records for r in wave], axis=0).astype(np.float32)
+
+        def on_chunk(latency_ms: float, n: int) -> None:
+            self.stats.chunks += 1
+            self.stats.chunk_ms.append(latency_ms)
+
+        t0 = time.perf_counter()
+        per_tree = self._chunker.eval(batch, on_chunk=on_chunk)   # (T, total)
+        if self.n_classes is not None:
+            from repro.core.forest import majority_vote
+
+            out = np.asarray(majority_vote(jnp.asarray(per_tree), self.n_classes))
+        else:
+            out = per_tree
+        self.stats.eval_s += time.perf_counter() - t0
+        off = 0
+        for r in wave:
+            m = r.records.shape[0]
+            r.out = out[off:off + m] if self.n_classes is not None else out[:, off:off + m]
             r.done = True
             off += m

@@ -28,11 +28,11 @@ Every variant is exact, so tuning is purely a performance decision: results
 are bit-identical to the serial branchless reference (Procedure 2).
 """
 
-from repro.tune.cache import TuneCache, TuneEntry, default_cache_path
+from repro.tune.cache import TuneCache, TuneEntry, default_cache_path, registry_fingerprint
 from repro.tune.dispatch import TunedEvaluator, tuned_eval
-from repro.tune.heuristic import heuristic_candidate, predicted_times
+from repro.tune.heuristic import heuristic_candidate, measured_d_mu, predicted_times
 from repro.tune.measure import Measurement, measure_candidate, time_callable, tune_workload
-from repro.tune.space import Candidate, WorkloadShape, search_space
+from repro.tune.space import Candidate, WorkloadShape, backend_tag, search_space
 
 __all__ = [
     "Candidate",
@@ -41,10 +41,13 @@ __all__ = [
     "TuneEntry",
     "TunedEvaluator",
     "WorkloadShape",
+    "backend_tag",
     "default_cache_path",
     "heuristic_candidate",
     "measure_candidate",
+    "measured_d_mu",
     "predicted_times",
+    "registry_fingerprint",
     "search_space",
     "time_callable",
     "tune_workload",

@@ -1,11 +1,17 @@
 """Persistent best-variant cache: JSON on disk, LRU dict in front.
 
-One JSON file holds every tuning result this machine has produced, keyed by
-``backend|M…|N…|A…|d…`` bucket strings (see
+One JSON file holds every tuning result this fleet has produced, keyed by
+``backend:kind:xN|M…|N…|A…|d…`` bucket strings (see
 :meth:`repro.tune.space.WorkloadShape.key`).  Lookups go through a bounded
 in-process LRU so the hot dispatch path never touches the filesystem;
 writes go straight through to disk (atomic rename) so concurrent processes
 at worst lose a race, never corrupt the file.
+
+Staleness: the file carries a fingerprint of the kernel variant registry
+(variant names + metadata + function sources, :func:`registry_fingerprint`).
+A kernel rewrite changes the fingerprint, so every stored winner — timings of
+code that no longer exists — is discarded on load and the affected buckets
+re-tune on next sight instead of replaying a stale decision.
 
 Default location: ``$REPRO_TUNE_CACHE`` or ``~/.cache/repro_tune/cache.json``.
 """
@@ -13,6 +19,7 @@ Default location: ``$REPRO_TUNE_CACHE`` or ``~/.cache/repro_tune/cache.json``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 import tempfile
@@ -21,7 +28,42 @@ from pathlib import Path
 from typing import Optional
 
 CACHE_ENV = "REPRO_TUNE_CACHE"
-CACHE_VERSION = 1
+CACHE_VERSION = 2  # v2: payload carries the variant-registry fingerprint
+
+
+@functools.lru_cache(maxsize=1)
+def registry_fingerprint() -> str:
+    """Hash of the kernel variant registry: names, metadata, sources.
+
+    Any change to a variant's implementation (or to the shared kernel/ops
+    modules they lower through) must invalidate stored winners, since the
+    cached medians priced code that no longer runs.
+    """
+    import hashlib
+    import inspect
+
+    from repro.core import eval_dataparallel as _dp
+    from repro.core import eval_speculative as _spec
+    from repro.kernels.tree_eval import kernel as _kernel
+    from repro.kernels.tree_eval import ops as _ops
+
+    h = hashlib.sha256()
+    for name in sorted(_ops.VARIANTS):
+        spec = _ops.VARIANTS[name]
+        h.update(name.encode())
+        h.update(f"|{spec.algorithm}|{spec.engine}|{spec.jump_mode}|{spec.tunables}".encode())
+        try:
+            h.update(inspect.getsource(spec.fn).encode())
+        except (OSError, TypeError):
+            h.update(repr(spec.fn).encode())
+    # the registered fns are thin wrappers: hash the modules the variants
+    # actually lower through (Pallas kernels + the jnp evaluators)
+    for mod in (_ops, _kernel, _spec, _dp):
+        try:
+            h.update(inspect.getsource(mod).encode())
+        except (OSError, TypeError):
+            pass
+    return h.hexdigest()[:16]
 
 
 def default_cache_path() -> Path:
@@ -63,28 +105,54 @@ class TuneCache:
     concurrent tuner's writes show up after :meth:`reload`.
     """
 
-    def __init__(self, path: os.PathLike | str | None = None, *, lru_size: int = 128):
+    def __init__(
+        self,
+        path: os.PathLike | str | None = None,
+        *,
+        lru_size: int = 128,
+        registry: str | None = None,
+    ):
         self.path = Path(path) if path is not None else default_cache_path()
         self.lru_size = lru_size
+        # injectable for tests; None = fingerprint of the live registry
+        self._registry = registry
         self._lru: OrderedDict[str, TuneEntry] = OrderedDict()
         self._table: dict[str, dict] = {}
         self.reload()
 
+    @property
+    def registry(self) -> str:
+        return self._registry if self._registry is not None else registry_fingerprint()
+
     # -- persistence --------------------------------------------------------
 
     def reload(self) -> None:
-        """(Re)read the on-disk table; tolerates a missing/corrupt file."""
+        """(Re)read the on-disk table; tolerates a missing/corrupt file.
+
+        Entries written under a different schema version or a different
+        kernel-registry fingerprint are discarded wholesale: a stale winner
+        names timings of code that no longer exists, so re-tuning is the
+        only honest recovery.
+        """
         self._table = {}
         try:
             raw = json.loads(self.path.read_text())
-            if isinstance(raw, dict) and raw.get("version") == CACHE_VERSION:
+            if (
+                isinstance(raw, dict)
+                and raw.get("version") == CACHE_VERSION
+                and raw.get("registry") == self.registry
+            ):
                 self._table = dict(raw.get("entries", {}))
         except (OSError, ValueError):
             pass
         self._lru.clear()
 
     def _flush(self) -> None:
-        payload = {"version": CACHE_VERSION, "entries": self._table}
+        payload = {
+            "version": CACHE_VERSION,
+            "registry": self.registry,
+            "entries": self._table,
+        }
         self.path.parent.mkdir(parents=True, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=self.path.parent, suffix=".tmp")
         try:

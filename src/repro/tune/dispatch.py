@@ -23,9 +23,9 @@ import jax.numpy as jnp
 from repro.core.tree import EncodedTree, tree_depth
 from repro.kernels.tree_eval.ops import VARIANTS, get_variant
 from repro.tune.cache import TuneCache, TuneEntry
-from repro.tune.heuristic import heuristic_candidate
+from repro.tune.heuristic import heuristic_candidate, measured_d_mu
 from repro.tune.measure import bucket_pad_records, tune_workload
-from repro.tune.space import Candidate, WorkloadShape
+from repro.tune.space import Candidate, WorkloadShape, backend_tag
 
 
 class TunedEvaluator:
@@ -44,12 +44,21 @@ class TunedEvaluator:
         autotune: bool = False,
         engines: tuple[str, ...] | None = None,
         measure_kw: dict | None = None,
+        measure_d_mu: bool = True,
+        d_mu_sample: int = 256,
+        heuristic_kw: dict | None = None,
     ):
         self.enc = enc
         self.cache = cache if cache is not None else TuneCache()
         self.autotune = autotune
         self.engines = engines
         self.measure_kw = dict(measure_kw or {})
+        # heuristic fallback: measure d_µ on a sample of the actual batch
+        # (paper: "measured on a significant sample") instead of trusting
+        # the geometry prior; heuristic_kw forwards cm/p_group overrides.
+        self.measure_d_mu = measure_d_mu
+        self.d_mu_sample = d_mu_sample
+        self.heuristic_kw = dict(heuristic_kw or {})
         self.depth = max(tree_depth(enc), 1)
         self._resolved: dict[str, tuple[Candidate, str]] = {}
         # (M, A) → (spec, params, bucket_m): the steady-state call path does
@@ -60,7 +69,7 @@ class TunedEvaluator:
         """Pick the candidate for this batch; returns (candidate, source)
         with source ∈ {"memo", "cache", "autotune", "heuristic"}."""
         shape = WorkloadShape.of(records, self.enc, self.depth)
-        backend = jax.default_backend()
+        backend = backend_tag()
         key = shape.key(backend)
         hit = self._resolved.get(key)
         if hit is not None:
@@ -82,7 +91,10 @@ class TunedEvaluator:
             cand = Candidate.make(entry.variant, **entry.params)
             source = "autotune"
         else:
-            cand = heuristic_candidate(shape, engines=self.engines)
+            kw = dict(self.heuristic_kw)
+            if self.measure_d_mu and "d_mu" not in kw:
+                kw["d_mu"] = measured_d_mu(self.enc, records, sample=self.d_mu_sample)
+            cand = heuristic_candidate(shape, engines=self.engines, **kw)
             source = "heuristic"
         self._resolved[key] = (cand, source)
         return cand, source

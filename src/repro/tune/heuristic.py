@@ -39,6 +39,28 @@ def default_d_mu(shape: WorkloadShape) -> float:
     return max(1.0, (balanced + shape.depth) / 2.0)
 
 
+def measured_d_mu(enc, records, *, sample: int = 256) -> float:
+    """d_µ measured on a record sample (the paper's "significant sample").
+
+    The geometry prior of :func:`default_d_mu` can sit far from the truth —
+    a deep vine whose traffic all exits at the first split has measured
+    d_µ ≈ 1 but a large prior — and equation (1)'s crossover moves with d_µ,
+    so the prior can pick the wrong algorithm.  Dispatch feeds the actual
+    batch through the branchless descent (host-side, on at most ``sample``
+    records) and hands the measured mean to the §3.6 model instead.
+    """
+    import numpy as np
+
+    from repro.core.analysis import mean_traversal_depth, observed_depths
+
+    rec = np.asarray(records)
+    if rec.shape[0] == 0:
+        return 1.0
+    if rec.shape[0] > sample:
+        rec = rec[:sample]
+    return max(1.0, float(mean_traversal_depth(observed_depths(enc, rec))))
+
+
 def predicted_times(
     shape: WorkloadShape,
     *,

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels.tree_eval.ops import get_variant
 from repro.tune.cache import TuneCache, TuneEntry
-from repro.tune.space import Candidate, WorkloadShape, search_space
+from repro.tune.space import Candidate, WorkloadShape, backend_tag, search_space
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,7 +134,7 @@ def tune_workload(
     """
     from repro.core.tree import tree_depth
 
-    backend = backend or jax.default_backend()
+    backend = backend or backend_tag()
     rec = jnp.asarray(records, jnp.float32)
     shape = WorkloadShape.of(rec, enc)
     rec = bucket_pad_records(rec, shape.bucket().m)

@@ -18,7 +18,10 @@ request sizes — the same reason the serve engine pads waves.
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Iterator
+
+import jax
 
 from repro.kernels.tree_eval.ops import (
     LANE,
@@ -41,6 +44,22 @@ def _next_pow2(x: int) -> int:
     return 1 << (x - 1).bit_length()
 
 
+def backend_tag() -> str:
+    """Backend + device kind + topology tag for cache keys.
+
+    ``jax.default_backend()`` alone conflates machine classes that tune very
+    differently (v5e vs v5p TPUs, laptop vs server CPUs), and a winner tuned
+    on one topology may lose on another (device count changes the shard
+    shapes the dist executor asks about).  Keying on
+    ``backend:device_kind:xN`` lets one shared cache file serve a
+    heterogeneous fleet: every machine class reads and writes its own rows.
+    """
+    devs = jax.devices()
+    kind = str(getattr(devs[0], "device_kind", "") or jax.default_backend())
+    kind = re.sub(r"[^0-9A-Za-z_.-]+", "_", kind).strip("_").lower()
+    return f"{jax.default_backend()}:{kind}:x{len(devs)}"
+
+
 @dataclasses.dataclass(frozen=True)
 class WorkloadShape:
     """The (M, N, A, depth) operating point of one tree-eval call."""
@@ -59,10 +78,15 @@ class WorkloadShape:
             depth=_next_pow2(self.depth),
         )
 
-    def key(self, backend: str) -> str:
-        """Stable cache key: backend + bucketed shape."""
+    def key(self, backend: str | None = None) -> str:
+        """Stable cache key: backend/topology tag + bucketed shape.
+
+        ``backend`` defaults to :func:`backend_tag` (device kind + count),
+        not the bare ``jax.default_backend()`` string.
+        """
         b = self.bucket()
-        return f"{backend}|M{b.m}|N{b.n_nodes}|A{b.n_attrs}|d{b.depth}"
+        tag = backend if backend is not None else backend_tag()
+        return f"{tag}|M{b.m}|N{b.n_nodes}|A{b.n_attrs}|d{b.depth}"
 
     @classmethod
     def of(cls, records, enc, depth: int | None = None) -> "WorkloadShape":

@@ -1,0 +1,313 @@
+"""repro.dist: planner vs the closed-form mesh cost model, sharded execution.
+
+Planner tests run in-process (pure host math).  Executor tests that need a
+real multi-device mesh run in subprocesses with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (jax locks the device
+count at first init), mirroring ``test_distributed.py``.
+
+The load-bearing property: whatever decomposition the planner picks,
+``eval_forest_sharded`` must be bit-identical to ``eval_forest_tuned`` —
+sharding is purely a performance decision.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.analysis import CostModel
+from repro.dist import (
+    ForestWorkload,
+    MeshCostModel,
+    ShardPlan,
+    enumerate_plans,
+    make_plan,
+    plan_forest,
+    predicted_plan_time,
+    shard_extents,
+)
+
+from hypothesis_compat import given, settings, st
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout=420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def wl(m=4096, t=16, n=31, a=19, depth=11, d_mu=6.0) -> ForestWorkload:
+    return ForestWorkload(m=m, n_trees=t, n_nodes=n, n_attrs=a, depth=depth, d_mu=d_mu)
+
+
+# ---------------------------------------------------------------------------
+# Planner vs the closed-form model
+# ---------------------------------------------------------------------------
+
+
+class TestPlanner:
+    def test_plan_cost_matches_closed_form(self):
+        """Every enumerated plan carries exactly predicted_plan_time(R, G)."""
+        mcm = MeshCostModel()
+        for p in enumerate_plans(wl(), 8, mcm):
+            t, alg = predicted_plan_time(wl(), p.record_shards, p.tree_shards, mcm)
+            assert p.predicted == t
+            assert p.algorithm == alg
+
+    def test_plan_forest_is_argmin(self):
+        mcm = MeshCostModel()
+        plans = enumerate_plans(wl(), 8, mcm)
+        chosen = plan_forest(wl(), 8, mesh_cost=mcm)
+        assert chosen.predicted == min(p.predicted for p in plans)
+
+    def test_single_device_degenerates(self):
+        p = plan_forest(wl(), 1)
+        assert (p.record_shards, p.tree_shards) == (1, 1)
+        assert p.decomposition == "single"
+
+    def test_decomposition_classification(self):
+        assert ShardPlan(8, 1, "data_parallel", 0.0).decomposition == "records"
+        assert ShardPlan(1, 8, "data_parallel", 0.0).decomposition == "trees"
+        assert ShardPlan(4, 2, "data_parallel", 0.0).decomposition == "hybrid"
+        assert ShardPlan(1, 1, "data_parallel", 0.0).decomposition == "single"
+
+    def test_forced_decomposition_filter(self):
+        for deco in ("records", "trees", "hybrid"):
+            p = plan_forest(wl(), 8, decomposition=deco)
+            assert p.decomposition == deco
+
+    def test_more_devices_never_predicted_slower(self):
+        """With a zero-overhead model, doubling D cannot raise the optimum
+        (the D-device plan set contains the D/2 one)."""
+        mcm = MeshCostModel(sigma_rec=0.0, sigma_tree=0.0, sigma_out=0.0, gamma_launch=0.0)
+        prev = float("inf")
+        for d in (1, 2, 4, 8, 16):
+            t = plan_forest(wl(), d, mesh_cost=mcm).predicted
+            assert t <= prev + 1e-9, (d, t, prev)
+            prev = t
+
+    def test_feasibility_clamps(self):
+        """Never more record shards than records or tree shards than trees."""
+        tiny = wl(m=3, t=2)
+        for p in enumerate_plans(tiny, 8):
+            assert p.record_shards <= 3
+            assert p.tree_shards <= 2
+        chosen = plan_forest(tiny, 8)
+        assert chosen.n_devices <= 6
+
+    def test_transfer_crossover_records_vs_trees(self):
+        """The §3.6-style transmission terms drive the decomposition choice:
+        record-heavy workloads shard records (tree sharding would re-send
+        the full M·A record array to every device row), tree-heavy
+        workloads shard trees (record sharding re-broadcasts the forest)."""
+        mcm = MeshCostModel(sigma_rec=1.0, sigma_tree=1.0, gamma_launch=0.0)
+        record_heavy = wl(m=65536, t=4)
+        tree_heavy = wl(m=64, t=512)
+        assert plan_forest(record_heavy, 4, mesh_cost=mcm).decomposition == "records"
+        assert plan_forest(tree_heavy, 4, mesh_cost=mcm).decomposition == "trees"
+
+    def test_shard_extents_cover_workload(self):
+        m_s, t_s = shard_extents(wl(m=1000, t=10), 8, 2)
+        assert m_s * 8 >= 1000 and t_s * 2 >= 10
+
+    def test_algorithm_follows_crossover(self):
+        """The per-shard algorithm is the §3.6 winner at the shard shape:
+        tiny record groups + deep traversals → speculative, and vice versa
+        (same contract as repro.tune's heuristic, equation (1))."""
+        mcm = MeshCostModel(cm=CostModel(t_e=1.0, t_c=1.0), p_device=1.0)
+        deep = wl(n=7, depth=30, d_mu=30.0)     # p_group=(7-1)/2=3 < crossover(30)
+        shallow = wl(n=1023, depth=10, d_mu=2.0)
+        assert make_plan(deep, 2, 1, mcm).algorithm == "speculative"
+        assert make_plan(shallow, 2, 1, mcm).algorithm == "data_parallel"
+
+    @given(
+        m=st.integers(1, 100_000),
+        t=st.integers(1, 64),
+        d=st.sampled_from([1, 2, 4, 6, 8]),
+        d_mu=st.floats(1.0, 16.0),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_planner_properties_randomized(self, m, t, d, d_mu):
+        w = wl(m=m, t=t, d_mu=d_mu)
+        plans = enumerate_plans(w, d)
+        assert any(p.record_shards == p.tree_shards == 1 for p in plans)
+        chosen = plan_forest(w, d)
+        assert chosen.predicted <= min(p.predicted for p in plans) + 1e-12
+        for p in plans:
+            assert p.n_devices <= d or p.n_devices == 1
+            assert p.record_shards <= max(m, 1)
+            assert p.tree_shards <= t
+            assert p.predicted > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Single-device fallback (in-process: the default CPU host has one device)
+# ---------------------------------------------------------------------------
+
+
+class TestSingleDeviceFallback:
+    def test_bit_match_and_no_shard_map(self, tmp_path):
+        out = run_with_devices("""
+            import numpy as np, tempfile, pathlib
+            from repro.core import (EncodedForest, breadth_first_encode, random_tree,
+                                    eval_forest_tuned, eval_forest_sharded)
+            from repro.dist import ShardedForestEvaluator
+            from repro.tune import TuneCache
+
+            trees = [breadth_first_encode(random_tree(n_attrs=7, n_classes=5,
+                                                      max_depth=d, seed=d))
+                     for d in (2, 5, 8)]
+            forest = EncodedForest(trees)
+            rec = np.random.default_rng(3).normal(size=(333, 7)).astype(np.float32)
+            cache = TuneCache(pathlib.Path(tempfile.mkdtemp()) / 'c.json')
+            ref = np.asarray(eval_forest_tuned(forest, rec, cache=cache))
+            ev = ShardedForestEvaluator(forest, cache=cache)
+            out = np.asarray(ev(rec))
+            assert np.array_equal(ref, out)
+            # the planner degraded to the plain tuned path: no mesh, no
+            # shard_map program was ever built
+            assert ev.plan.decomposition == 'single'
+            assert ev.mesh is None and ev.record_sharding is None
+            assert not ev._fast
+            out2 = np.asarray(eval_forest_sharded(forest, rec, cache=cache))
+            assert np.array_equal(ref, out2)
+            print('OK')
+        """, n_devices=1)
+        assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution on a forced 8-device host mesh
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_matches_tuned_all_decompositions():
+    """Acceptance: record-, tree- and hybrid-sharded plans are numerically
+    identical to eval_forest_tuned on an 8-device host mesh."""
+    out = run_with_devices("""
+        import numpy as np, jax, tempfile, pathlib
+        from repro.core import (EncodedForest, breadth_first_encode, random_tree,
+                                eval_forest_tuned, eval_forest_sharded)
+        from repro.dist import ShardedForestEvaluator
+        from repro.tune import TuneCache
+
+        assert jax.device_count() == 8
+        trees = [breadth_first_encode(random_tree(n_attrs=9, n_classes=6,
+                                                  max_depth=3 + (i % 6), seed=i))
+                 for i in range(12)]
+        forest = EncodedForest(trees)
+        rec = np.random.default_rng(1).normal(size=(1000, 9)).astype(np.float32)
+        cache = TuneCache(pathlib.Path(tempfile.mkdtemp()) / 'c.json')
+        ref = np.asarray(eval_forest_tuned(forest, rec, cache=cache))
+        for deco in ('records', 'trees', 'hybrid', None):
+            ev = ShardedForestEvaluator(forest, decomposition=deco, cache=cache)
+            out = np.asarray(ev(rec))
+            assert np.array_equal(ref, out), deco
+            if deco is not None:
+                assert ev.plan.decomposition == deco
+                assert ev.mesh is not None      # genuinely lowered via shard_map
+        # odd small M exercises the divisibility padding
+        for m in (7, 3, 2):
+            r = rec[:m]
+            got = np.asarray(eval_forest_sharded(forest, r,
+                                                 decomposition='hybrid', cache=cache))
+            assert np.array_equal(ref[:, :m], got), m
+        print('OK')
+    """)
+    assert "OK" in out
+
+
+def test_stream_chunker_and_serve_engine():
+    """Chunked streaming equals the monolithic result; per-chunk latency is
+    recorded; ForestServeEngine round-trips requests with majority votes."""
+    out = run_with_devices("""
+        import numpy as np, jax.numpy as jnp, tempfile, pathlib
+        from repro.core import (EncodedForest, breadth_first_encode, random_tree,
+                                eval_forest_tuned, eval_serial, majority_vote)
+        from repro.dist import ShardedForestEvaluator, StreamingChunker
+        from repro.serve import ForestServeEngine, TreeRequest
+        from repro.tune import TuneCache
+
+        trees = [breadth_first_encode(random_tree(n_attrs=9, n_classes=6,
+                                                  max_depth=2 + (i % 5), seed=i))
+                 for i in range(8)]
+        forest = EncodedForest(trees)
+        rec = np.random.default_rng(2).normal(size=(1500, 9)).astype(np.float32)
+        cache = TuneCache(pathlib.Path(tempfile.mkdtemp()) / 'c.json')
+        ref = np.asarray(eval_forest_tuned(forest, rec, cache=cache))
+
+        ev = ShardedForestEvaluator(forest, cache=cache)
+        ck = StreamingChunker(ev, chunk_records=256)
+        out = ck.eval(rec)
+        assert np.array_equal(ref, out)
+        assert ck.stats.chunks == 6               # ceil(1500/256)
+        assert ck.stats.records == 1500
+        assert len(ck.stats.chunk_ms) == 6
+        assert all(l > 0 for l in ck.stats.chunk_ms)
+
+        rng = np.random.default_rng(5)
+        reqs = [TreeRequest(uid=i, records=rng.normal(
+                    size=(int(rng.integers(1, 200)), 9)).astype(np.float32))
+                for i in range(7)]
+        eng = ForestServeEngine(forest, max_batch=512, chunk_records=128,
+                                n_classes=6, cache=cache)
+        eng.run(reqs)
+        assert eng.stats.waves >= 2
+        assert eng.stats.chunks == len(eng.stats.chunk_ms) >= eng.stats.waves
+        assert eng.stats.records == sum(r.records.shape[0] for r in reqs)
+        for r in reqs:
+            per = np.stack([np.asarray(eval_serial(forest.tree(i), r.records))
+                            for i in range(forest.n_trees)])
+            want = np.asarray(majority_vote(jnp.asarray(per), 6))
+            assert r.done and np.array_equal(r.out, want), r.uid
+        print('OK')
+    """)
+    assert "OK" in out
+
+
+def test_executor_resolves_through_tune_cache():
+    """The per-shard kernel choice flows through the repro.tune cache: a
+    pre-seeded winner at the shard shape is what the executor picks up."""
+    out = run_with_devices("""
+        import numpy as np, tempfile, pathlib
+        from repro.core import (EncodedForest, breadth_first_encode, random_tree,
+                                eval_forest_tuned)
+        from repro.dist import ShardedForestEvaluator, ShardPlan
+        from repro.tune import TuneCache, TuneEntry, WorkloadShape
+
+        trees = [breadth_first_encode(random_tree(n_attrs=9, n_classes=6,
+                                                  max_depth=6, seed=i))
+                 for i in range(8)]
+        forest = EncodedForest(trees)
+        rec = np.random.default_rng(1).normal(size=(1024, 9)).astype(np.float32)
+        cache = TuneCache(pathlib.Path(tempfile.mkdtemp()) / 'c.json')
+        plan = ShardPlan(record_shards=4, tree_shards=2,
+                         algorithm='data_parallel', predicted=0.0)
+        # seed the cache at the shard shape (M/R=256) with a specific winner
+        shard_shape = WorkloadShape(m=256, n_nodes=forest.n_nodes, n_attrs=9,
+                                    depth=forest.max_depth)
+        cache.store(shard_shape.key(),
+                    TuneEntry(variant='jnp_speculative_gather',
+                              params={'jumps_per_round': 3}, median_ms=0.1))
+        ev = ShardedForestEvaluator(forest, plan=plan, cache=cache)
+        out = np.asarray(ev(rec))
+        cand, source = ev.resolved
+        assert source == 'cache', source
+        assert cand.variant == 'jnp_speculative_gather'
+        assert cand.param_dict == {'jumps_per_round': 3}
+        ref = np.asarray(eval_forest_tuned(forest, rec, cache=cache))
+        assert np.array_equal(ref, out)
+        print('OK')
+    """)
+    assert "OK" in out

@@ -10,7 +10,7 @@ import json
 import numpy as np
 import pytest
 
-from repro.core import breadth_first_encode, eval_serial, paper_tree, random_tree
+from repro.core import Node, breadth_first_encode, eval_serial, paper_tree, random_tree
 from repro.core.analysis import CostModel, speculative_wins
 from repro.kernels.tree_eval import VARIANTS, get_variant
 from repro.tune import (
@@ -19,8 +19,11 @@ from repro.tune import (
     TuneEntry,
     TunedEvaluator,
     WorkloadShape,
+    backend_tag,
     heuristic_candidate,
+    measured_d_mu,
     predicted_times,
+    registry_fingerprint,
     search_space,
     tuned_eval,
     tune_workload,
@@ -64,6 +67,37 @@ class TestShapeBucketing:
         enc = breadth_first_encode(paper_tree())
         s = WorkloadShape.of(_records(50, 19), enc)
         assert s == WorkloadShape(m=50, n_nodes=31, n_attrs=19, depth=11)
+
+
+# ---------------------------------------------------------------------------
+# Multi-backend cache keys: backend + device kind + topology
+# ---------------------------------------------------------------------------
+
+
+class TestBackendTag:
+    def test_tag_carries_backend_kind_and_count(self):
+        import jax
+
+        tag = backend_tag()
+        backend, kind, count = tag.split(":")
+        assert backend == jax.default_backend()
+        assert kind and "|" not in kind and " " not in kind
+        assert count == f"x{jax.device_count()}"
+
+    def test_key_defaults_to_backend_tag(self):
+        s = WorkloadShape(m=100, n_nodes=31, n_attrs=19, depth=11)
+        assert s.key() == s.key(backend_tag())
+        # distinct topologies key distinct rows in one shared file
+        assert s.key("tpu:v5e:x8") != s.key("tpu:v5p:x8") != s.key("cpu:cpu:x1")
+
+    def test_dispatch_stores_under_backend_tag(self, tmp_path):
+        cache = TuneCache(tmp_path / "c.json")
+        enc = breadth_first_encode(paper_tree())
+        ev = TunedEvaluator(enc, cache=cache, autotune=True,
+                            measure_kw={"warmup": 1, "iters": 2})
+        ev(_records(32, 19, seed=21))
+        assert len(cache) == 1
+        assert cache.keys()[0].startswith(backend_tag() + "|")
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +179,94 @@ class TestCache:
         assert len(cache._lru) <= 2
         # evicted keys still resolve from the table
         assert cache.lookup("k0").median_ms == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Registry-fingerprint invalidation: kernel rewrites drop stored winners
+# ---------------------------------------------------------------------------
+
+
+class TestRegistryInvalidation:
+    ENTRY = TuneEntry(variant="jnp_data_parallel", params={}, median_ms=1.0)
+
+    def test_fingerprint_stable_and_nonempty(self):
+        assert registry_fingerprint()
+        assert registry_fingerprint() == registry_fingerprint()
+
+    def test_same_registry_round_trips(self, tmp_path):
+        TuneCache(tmp_path / "c.json", registry="fp_a").store("k", self.ENTRY)
+        assert TuneCache(tmp_path / "c.json", registry="fp_a").lookup("k") is not None
+
+    def test_changed_registry_discards_entries(self, tmp_path):
+        """A kernel rewrite (new fingerprint) must orphan every stored
+        winner: its medians priced code that no longer exists."""
+        TuneCache(tmp_path / "c.json", registry="fp_a").store("k", self.ENTRY)
+        stale = TuneCache(tmp_path / "c.json", registry="fp_b")
+        assert len(stale) == 0
+        assert stale.lookup("k") is None
+        # re-tuning on the new registry overwrites the file cleanly
+        stale.store("k", self.ENTRY)
+        assert TuneCache(tmp_path / "c.json", registry="fp_b").lookup("k") is not None
+        assert TuneCache(tmp_path / "c.json", registry="fp_a").lookup("k") is None
+
+    def test_default_registry_is_live_fingerprint(self, tmp_path):
+        cache = TuneCache(tmp_path / "c.json")
+        assert cache.registry == registry_fingerprint()
+        cache.store("k", self.ENTRY)
+        assert TuneCache(tmp_path / "c.json").lookup("k") is not None
+
+
+# ---------------------------------------------------------------------------
+# Measured d_µ in the heuristic (vs the geometry prior)
+# ---------------------------------------------------------------------------
+
+
+def _shallow_exit_vine(depth: int = 14) -> "Node":
+    """A depth-``depth`` vine whose root sends *every* record to a depth-1
+    leaf: geometry prior d_µ ≈ (log₂N + depth)/2, measured d_µ = 1."""
+    node = Node(attr=0, threshold=0.0, left=Node(class_val=0), right=Node(class_val=1))
+    for _ in range(depth - 1):
+        node = Node(attr=0, threshold=0.0, left=node, right=Node(class_val=2))
+    # root: threshold -1e9 ⇒ r[0] > -1e9 for all finite records ⇒ go right
+    return Node(attr=0, threshold=-1e9, left=node, right=Node(class_val=3))
+
+
+class TestMeasuredDmu:
+    def test_measured_d_mu_sees_shallow_traffic(self):
+        enc = breadth_first_encode(_shallow_exit_vine())
+        rec = _records(200, 5, seed=30)
+        assert measured_d_mu(enc, rec) == 1.0
+
+    def test_crossover_shifts_with_measured_d_mu(self, tmp_path):
+        """Equation (1)'s crossover moves with d_µ: at p_group=4 the prior
+        (d_µ ≈ 9.4) predicts speculative wins, the measured depth (d_µ = 1)
+        predicts data decomposition.  Dispatch must follow the measurement."""
+        from repro.tune.heuristic import default_d_mu
+
+        enc = breadth_first_encode(_shallow_exit_vine(depth=14))
+        rec = _records(64, 5, seed=31)
+        shape = WorkloadShape.of(rec, enc)
+        hk = {"cm": CostModel(t_e=1.0, t_c=1.0), "p_group": 4.0}
+
+        prior = heuristic_candidate(shape, d_mu=default_d_mu(shape), **hk)
+        measured = heuristic_candidate(shape, d_mu=measured_d_mu(enc, rec), **hk)
+        assert get_variant(prior.variant).algorithm == "speculative"
+        assert get_variant(measured.variant).algorithm == "data_parallel"
+
+        ev_meas = TunedEvaluator(enc, cache=TuneCache(tmp_path / "a.json"),
+                                 heuristic_kw=hk)
+        cand, source = ev_meas.resolve(rec)
+        assert source == "heuristic"
+        assert get_variant(cand.variant).algorithm == "data_parallel"
+
+        ev_prior = TunedEvaluator(enc, cache=TuneCache(tmp_path / "b.json"),
+                                  measure_d_mu=False, heuristic_kw=hk)
+        cand, _ = ev_prior.resolve(rec)
+        assert get_variant(cand.variant).algorithm == "speculative"
+
+        # either way, dispatch stays bit-identical to the serial reference
+        assert np.array_equal(np.asarray(ev_meas(rec)), eval_serial(enc, rec))
+        assert np.array_equal(np.asarray(ev_prior(rec)), eval_serial(enc, rec))
 
 
 # ---------------------------------------------------------------------------
@@ -252,7 +374,7 @@ class TestDispatch:
         cache = TuneCache(tmp_path / "c.json")
         enc = breadth_first_encode(paper_tree())
         rec = _records(40, 19, seed=10)
-        key = WorkloadShape.of(rec, enc).key(__import__("jax").default_backend())
+        key = WorkloadShape.of(rec, enc).key()  # default backend_tag
         cache.store(key, TuneEntry(variant="gone_variant", params={}, median_ms=1.0))
         ev = TunedEvaluator(enc, cache=cache)
         cand, source = ev.resolve(rec)
