@@ -7,8 +7,13 @@ attribute width) this bench:
      variant (the fixed strategies a caller could have hardcoded) and
      persisting the per-bucket winner into the tune cache;
   2. times ``TunedEvaluator`` dispatch end-to-end against the warm cache;
-  3. emits ``results/BENCH_tree_eval.json`` comparing tuned dispatch with
-     every fixed variant, flagging whether tuned is within noise of the best.
+  3. repeats both steps at the *forest* level: every candidate family
+     (per-tree variant vector, shared-variant vmap, fused stacked kernel)
+     is measured by :func:`repro.tune.tune_forest_workload`, then
+     forest-level tuned dispatch is raced against the per-tree path;
+  4. emits ``results/BENCH_tree_eval.json`` comparing tuned dispatch with
+     every fixed variant (tree ``entries`` + ``forest_entries``), flagging
+     whether tuned is within noise of the best.
 
     PYTHONPATH=src python -m benchmarks.tune_sweep
 """
@@ -23,8 +28,17 @@ import numpy as np
 
 from benchmarks.common import write_bench_json
 from repro.core import breadth_first_encode, paper_tree, perfect_tree, random_tree, tree_depth
-from repro.kernels.tree_eval.ops import get_variant
-from repro.tune import TuneCache, TunedEvaluator, WorkloadShape, tune_workload
+from repro.core.forest import EncodedForest
+from repro.kernels.tree_eval.ops import PER_TREE_FAMILY, get_variant
+from repro.tune import (
+    ForestShape,
+    ForestTunedEvaluator,
+    TuneCache,
+    TunedEvaluator,
+    WorkloadShape,
+    tune_forest_workload,
+    tune_workload,
+)
 from repro.tune.measure import interleaved_samples
 
 # Distinct operating points (paper §5–§6: the winner depends on where you sit).
@@ -34,6 +48,15 @@ WORKLOADS = [
     ("deep_perfect_d8_n511", lambda: perfect_tree(8, 19, 7, seed=1), 2048, 19),
     ("wide_shallow_d4_a130", lambda: random_tree(
         n_attrs=130, n_classes=7, max_depth=4, min_depth=4, seed=2, balance=1.0), 8192, 130),
+]
+
+# Forest operating points: homogeneous (stacked families should win — zero
+# depth-padding waste) vs heterogeneous (the per-tree family's territory).
+FOREST_WORKLOADS = [
+    # name, tree depths, M, A
+    ("forest_uniform_t8_d6", [6] * 8, 4096, 19),
+    ("forest_mixed_t8_d2-9", [2 + (i % 8) for i in range(8)], 4096, 19),
+    ("forest_wide_t32_d4", [4] * 32, 1024, 19),
 ]
 
 
@@ -101,19 +124,96 @@ def sweep_one(name, build_tree, m, n_attrs, *, cache, iters, warmup):
     }
 
 
+def sweep_forest(name, depths, m, n_attrs, *, cache, iters, warmup):
+    """Measure every forest candidate family, then race forest-level tuned
+    dispatch against the per-tree path (the PR 3 baseline)."""
+    trees = [
+        breadth_first_encode(
+            random_tree(n_attrs=n_attrs, n_classes=7, max_depth=d, min_depth=d,
+                        seed=100 + i, balance=1.0)
+        )
+        for i, d in enumerate(depths)
+    ]
+    forest = EncodedForest(trees)
+    rec = jnp.asarray(
+        np.random.default_rng(zlib.crc32(name.encode())).normal(size=(m, n_attrs)),
+        jnp.float32,
+    )
+    shape = ForestShape.of(rec, forest)
+    print(f"\n[{name}] shape={shape} bucket={shape.bucket()}")
+
+    # autotune_trees: the per_tree family is priced at its tuned best (the
+    # PR 3 baseline), with the per-tree winners persisted so the raced
+    # per-tree dispatcher below replays them
+    entry, measurements = tune_forest_workload(
+        rec, forest, cache=cache, iters=iters, warmup=warmup, verbose=True,
+        autotune_trees=True,
+    )
+
+    # Best median per candidate family/variant (min over its parameter grid).
+    family_best: dict[str, float] = {}
+    for meas in measurements:
+        if meas.failed:
+            continue
+        v = meas.candidate.variant
+        family_best[v] = min(family_best.get(v, float("inf")), meas.median_ms)
+
+    # Forest-level tuned dispatch (warm cache, whatever family won) raced
+    # interleaved against the forced per-tree path — the question this
+    # bench answers: what does promoting tuning to the forest level buy
+    # over PR 3's tree-by-tree dispatch?
+    ev_tuned = ForestTunedEvaluator(forest, cache=cache)
+    ev_per_tree = ForestTunedEvaluator(forest, cache=cache, families=(PER_TREE_FAMILY,))
+    samples = interleaved_samples(
+        {
+            "forest_tuned": lambda: ev_tuned(rec),
+            "per_tree": lambda: ev_per_tree(rec),
+        },
+        warmup=warmup,
+        iters=max(iters, 15),
+    )
+    tuned_ms = float(np.median(samples["forest_tuned"]))
+    per_tree_ms = float(np.median(samples["per_tree"]))
+    ratio = float(np.median(np.asarray(samples["forest_tuned"]) / np.asarray(samples["per_tree"])))
+    cand, source = ev_tuned.resolve(rec)
+    print(f"  forest tuned {tuned_ms:.3f} ms vs per-tree {per_tree_ms:.3f} ms, "
+          f"paired ratio {ratio:.3f} (winner {entry.variant} {entry.params}, "
+          f"dispatch source {source})")
+
+    return {
+        "workload": name,
+        "shape": dataclasses.asdict(shape),
+        "bucket": dataclasses.asdict(shape.bucket()),
+        "candidate_best_ms": {k: round(v, 6) for k, v in sorted(family_best.items())},
+        "best_variant": entry.variant,
+        "best_params": entry.params,
+        "forest_tuned_ms": round(tuned_ms, 6),
+        "per_tree_ms": round(per_tree_ms, 6),
+        "forest_tuned_vs_per_tree": round(ratio, 4),
+        "forest_tuned_not_worse": bool(ratio <= 1.25),
+    }
+
+
 def main(iters: int = 7, warmup: int = 2, cache_path=None) -> dict:
     cache = TuneCache(cache_path)
     entries = [
         sweep_one(name, build, m, a, cache=cache, iters=iters, warmup=warmup)
         for name, build, m, a in WORKLOADS
     ]
+    forest_entries = [
+        sweep_forest(name, depths, m, a, cache=cache, iters=iters, warmup=warmup)
+        for name, depths, m, a in FOREST_WORKLOADS
+    ]
     path = write_bench_json(
-        "tree_eval", entries, cache_path=str(cache.path), cache_entries=len(cache)
+        "tree_eval", entries, cache_path=str(cache.path), cache_entries=len(cache),
+        forest_entries=forest_entries,
     )
     n_ok = sum(e["tuned_within_noise_of_best"] for e in entries)
-    print(f"\ntuned within noise of best fixed on {n_ok}/{len(entries)} shapes")
+    n_fok = sum(e["forest_tuned_not_worse"] for e in forest_entries)
+    print(f"\ntuned within noise of best fixed on {n_ok}/{len(entries)} tree shapes; "
+          f"forest tuned not worse than per-tree on {n_fok}/{len(forest_entries)} forests")
     print(f"wrote {path}")
-    return {"entries": entries, "path": str(path)}
+    return {"entries": entries, "forest_entries": forest_entries, "path": str(path)}
 
 
 if __name__ == "__main__":

@@ -1,10 +1,39 @@
-"""Render the §Roofline markdown table from a dryrun JSON."""
+"""Render markdown reports from the repo's machine-readable result files.
 
+Three renderers share one CLI:
+
+  * ``roofline <dryrun.json> [mesh]``   — the §Roofline table (original use);
+  * ``benchmarks [-o docs/benchmarks.md]`` — the benchmark report: every
+    ``results/BENCH_*.json`` (tune sweep, dist sweep) rendered into
+    markdown tables, deterministically (same JSONs ⇒ byte-identical
+    output), so CI can regenerate and diff;
+  * ``check-links <file.md ...>``       — verify that relative markdown
+    links in the given files resolve to existing files/anchors-free paths.
+
+Stdlib only — the docs CI job runs these without importing jax.
+
+    python results/make_table.py benchmarks -o docs/benchmarks.md
+    python results/make_table.py check-links README.md docs/*.md
+"""
+
+from __future__ import annotations
+
+import argparse
 import json
+import re
 import sys
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parent
 
 
-def main(path, mesh_filter=None):
+# ---------------------------------------------------------------------------
+# roofline table (dryrun JSONs)
+# ---------------------------------------------------------------------------
+
+
+def render_roofline(path, mesh_filter=None) -> str:
+    """The §Roofline markdown table from a dryrun JSON."""
     rows = json.load(open(path))
     out = []
     hdr = ("| arch | shape | step | mesh | compute s | memory s | collective s "
@@ -30,8 +59,251 @@ def main(path, mesh_filter=None):
             f"| {r['dominant']} | {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
             f"| {fit:.1f} |"
         )
-    print("\n".join(out))
+    return "\n".join(out)
+
+
+# ---------------------------------------------------------------------------
+# benchmark report (results/BENCH_*.json)
+# ---------------------------------------------------------------------------
+
+
+def _ms(x) -> str:
+    return f"{x:.3f}"
+
+
+def render_tree_eval(data: dict) -> str:
+    """BENCH_tree_eval.json → tuned-dispatch report (tree + forest levels)."""
+    out = ["## Tree-eval autotuning (`BENCH_tree_eval.json`)", ""]
+    out.append(f"Backend `{data.get('backend', '?')}`, jax {data.get('jax', '?')}, "
+               f"{data.get('cache_entries', '?')} cache entries after the sweep.")
+    out.append("")
+    out.append("### Per-tree: tuned dispatch vs every fixed variant")
+    out.append("")
+    out.append("| workload | M | N | A | d | best variant | best fixed ms "
+               "| tuned ms | tuned/best | within noise |")
+    out.append("|" + "---|" * 10)
+    for e in data.get("entries", []):
+        s = e["shape"]
+        out.append(
+            f"| {e['workload']} | {s['m']} | {s['n_nodes']} | {s['n_attrs']} "
+            f"| {e['depth']} | `{e['best_variant']}` {e['best_params'] or ''} "
+            f"| {_ms(e['best_fixed_interleaved_ms'])} | {_ms(e['tuned_ms'])} "
+            f"| {e['tuned_vs_best_fixed']:.3f} "
+            f"| {'yes' if e['tuned_within_noise_of_best'] else 'NO'} |"
+        )
+    out.append("")
+    out.append("Per-variant best medians (min over each variant's parameter grid):")
+    out.append("")
+    for e in data.get("entries", []):
+        out.append(f"* **{e['workload']}** — " + ", ".join(
+            f"`{k}` {_ms(v)} ms" for k, v in sorted(e["fixed_variants_ms"].items())
+        ))
+    forest = data.get("forest_entries", [])
+    if forest:
+        out.append("")
+        out.append("### Forest level: tuned family vs the per-tree path")
+        out.append("")
+        out.append("The forest tuner ranks three candidate families — per-tree "
+                   "variant vectors, shared-variant vmap, fused stacked kernel "
+                   "— per (T, M, N_max, A, depth-profile) bucket.")
+        out.append("")
+        out.append("| workload | T | M | depth profile | winning candidate "
+                   "| forest tuned ms | per-tree ms | tuned/per-tree | not worse |")
+        out.append("|" + "---|" * 9)
+        for e in forest:
+            s = e["shape"]
+            out.append(
+                f"| {e['workload']} | {s['t']} | {s['m']} "
+                f"| d{s['depth_min']}–{s['depth_max']} "
+                f"| `{e['best_variant']}` {e['best_params'] or ''} "
+                f"| {_ms(e['forest_tuned_ms'])} | {_ms(e['per_tree_ms'])} "
+                f"| {e['forest_tuned_vs_per_tree']:.3f} "
+                f"| {'yes' if e['forest_tuned_not_worse'] else 'NO'} |"
+            )
+        out.append("")
+        out.append("Per-candidate best medians:")
+        out.append("")
+        for e in forest:
+            out.append(f"* **{e['workload']}** — " + ", ".join(
+                f"`{k}` {_ms(v)} ms" for k, v in sorted(e["candidate_best_ms"].items())
+            ))
+    return "\n".join(out)
+
+
+def render_dist(data: dict) -> str:
+    """BENCH_dist.json → plan-predicted vs measured decomposition report."""
+    out = ["## Sharded-forest decomposition sweep (`BENCH_dist.json`)", ""]
+    out.append(f"Backend `{data.get('backend', '?')}`, jax {data.get('jax', '?')}, "
+               f"{data.get('n_devices', '?')} forced host devices; "
+               f"mesh shapes {data.get('mesh_shapes', '?')}.  Predicted costs are "
+               f"model units (rank-valid, not milliseconds).")
+    out.append("")
+    out.append("### Per-mesh measurements")
+    out.append("")
+    out.append("| workload | mesh R×G | decomposition | shard algorithm "
+               "| predicted (units) | measured ms |")
+    out.append("|" + "---|" * 6)
+    for e in data.get("entries", []):
+        if e.get("mode"):
+            continue
+        r, g = e["mesh"]
+        out.append(
+            f"| {e['workload']} | {r}×{g} | {e['decomposition']} "
+            f"| {e['shard_algorithm']} | {e['predicted_model_units']:.1f} "
+            f"| {_ms(e['measured_ms'])} |"
+        )
+    out.append("")
+    out.append("### Streaming chunker (double-buffered) vs monolithic")
+    out.append("")
+    out.append("| workload | mesh R×G | chunk records | stream ms | monolithic ms "
+               "| chunk median ms |")
+    out.append("|" + "---|" * 6)
+    for e in data.get("entries", []):
+        if e.get("mode") != "stream_chunked":
+            continue
+        r, g = e["mesh"]
+        out.append(
+            f"| {e['workload']} | {r}×{g} | {e['chunk_records']} "
+            f"| {_ms(e['measured_ms'])} | {_ms(e['monolithic_ms'])} "
+            f"| {_ms(e['chunk_ms_median'])} |"
+        )
+    out.append("")
+    out.append("### Plan-predicted vs measured winners")
+    out.append("")
+    out.append(f"Crossover agreement: **{data.get('crossover_agreement', '?')}** "
+               f"(predicted-best mesh == measured-best mesh per workload).")
+    out.append("")
+    out.append("| workload | M | T | d_µ | planner choice | predicted winner "
+               "| measured winner | agree |")
+    out.append("|" + "---|" * 8)
+    for s in data.get("summaries", []):
+        ws = s["workload_shape"]
+        pc = s["planner_choice"]
+        pw = "×".join(str(x) for x in s["predicted_winner_mesh"])
+        mw = "×".join(str(x) for x in s["measured_winner_mesh"])
+        pcm = "×".join(str(x) for x in pc["mesh"])
+        out.append(
+            f"| {s['workload']} | {ws['m']} | {ws['n_trees']} | {ws['d_mu']:.2f} "
+            f"| {pcm} ({pc['decomposition']}) | {pw} | {mw} "
+            f"| {'yes' if s['crossover_agreement'] else 'NO'} |"
+        )
+    return "\n".join(out)
+
+
+_RENDERERS = {
+    "BENCH_tree_eval.json": render_tree_eval,
+    "BENCH_dist.json": render_dist,
+}
+
+
+def render_benchmarks(results_dir: Path = RESULTS_DIR) -> str:
+    """The full docs/benchmarks.md body from every known BENCH_*.json.
+
+    Deterministic: depends only on the JSON contents (no timestamps), so
+    the CI docs job can regenerate and ``diff`` against the committed file.
+    """
+    out = [
+        "# Benchmark report",
+        "",
+        "*Generated from `results/BENCH_*.json` by `results/make_table.py` — do "
+        "not edit by hand.  Regenerate with:*",
+        "",
+        "```sh",
+        "python results/make_table.py benchmarks -o docs/benchmarks.md",
+        "```",
+        "",
+        "*The JSONs themselves are produced by the benches "
+        "(`PYTHONPATH=src python -m benchmarks.run tune dist_sweep`); "
+        "see `docs/tuning.md` for how to read them.*",
+        "",
+    ]
+    found = False
+    for name, renderer in _RENDERERS.items():
+        path = results_dir / name
+        if not path.exists():
+            continue
+        found = True
+        out.append(renderer(json.loads(path.read_text())))
+        out.append("")
+    if not found:
+        out.append("*(no results/BENCH_*.json files found)*")
+        out.append("")
+    return "\n".join(out).rstrip() + "\n"
+
+
+# ---------------------------------------------------------------------------
+# markdown link checker
+# ---------------------------------------------------------------------------
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links(paths: list[str]) -> list[str]:
+    """Return a list of broken relative links across the given markdown files.
+
+    External (``http(s)://``), mail and pure-anchor links are skipped; a
+    relative link is resolved against the linking file's directory and must
+    name an existing file or directory (any ``#fragment`` is ignored).
+    """
+    errors = []
+    for p in paths:
+        path = Path(p)
+        text = path.read_text()
+        for m in _LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            if not resolved.exists():
+                errors.append(f"{p}: broken link -> {target}")
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__,
+                                     formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    p_roof = sub.add_parser("roofline", help="render the roofline table from a dryrun JSON")
+    p_roof.add_argument("path")
+    p_roof.add_argument("mesh", nargs="?", default=None)
+
+    p_bench = sub.add_parser("benchmarks", help="render docs/benchmarks.md from BENCH_*.json")
+    p_bench.add_argument("-o", "--output", default=None,
+                         help="write here instead of stdout")
+    p_bench.add_argument("--results-dir", default=str(RESULTS_DIR))
+
+    p_links = sub.add_parser("check-links", help="verify relative markdown links resolve")
+    p_links.add_argument("files", nargs="+")
+
+    args = parser.parse_args(argv)
+    if args.cmd == "roofline":
+        print(render_roofline(args.path, args.mesh))
+        return 0
+    if args.cmd == "benchmarks":
+        body = render_benchmarks(Path(args.results_dir))
+        if args.output:
+            Path(args.output).write_text(body)
+            print(f"wrote {args.output}")
+        else:
+            sys.stdout.write(body)
+        return 0
+    if args.cmd == "check-links":
+        errors = check_links(args.files)
+        for e in errors:
+            print(e, file=sys.stderr)
+        print(f"{len(errors)} broken link(s) in {len(args.files)} file(s)")
+        return 1 if errors else 0
+    return 2
 
 
 if __name__ == "__main__":
-    main(sys.argv[1], sys.argv[2] if len(sys.argv) > 2 else None)
+    raise SystemExit(main())

@@ -87,29 +87,25 @@ def eval_forest_tuned(
     cache=None,
     autotune: bool = False,
     engines: tuple[str, ...] | None = None,
+    families: tuple[str, ...] | None = None,
 ) -> jax.Array:
-    """Per-tree class assignments, shape (T, M), via autotuned dispatch.
+    """Per-tree class assignments, shape (T, M), via forest-level dispatch.
 
-    Each tree routes through :func:`repro.tune.tuned_eval`'s evaluator, so
-    the per-shape winning variant (cached, autotuned, or the §3.6-model
-    heuristic) is selected per tree — trees of different geometry inside one
-    forest may legitimately pick different kernels.
+    The whole call resolves through :class:`repro.tune.ForestTunedEvaluator`
+    as one unit: the (T, M, N_max, A, depth-profile) bucket picks between
+    per-tree variant vectors (trees of different geometry may legitimately
+    use different kernels), the shared-variant vmap path, and the fused
+    stacked Pallas kernel that evaluates the forest in one launch.  With
+    ``autotune=True`` the first sight of a bucket measures all three
+    families and persists the winner.  Every family is exact, so the choice
+    never changes results — bit-identical to evaluating each tree with
+    ``eval_serial``.
     """
-    from repro.tune import TuneCache, TunedEvaluator
+    from repro.tune import ForestTunedEvaluator
 
-    if cache is None:
-        cache = TuneCache()  # one shared handle: one disk read for the forest
-    trees = (
-        [forest.tree(i) for i in range(forest.n_trees)]
-        if isinstance(forest, EncodedForest)
-        else list(forest)
-    )
-    rec = jnp.asarray(records, jnp.float32)
-    outs = [
-        TunedEvaluator(t, cache=cache, autotune=autotune, engines=engines)(rec)
-        for t in trees
-    ]
-    return jnp.stack(outs)
+    return ForestTunedEvaluator(
+        forest, cache=cache, autotune=autotune, engines=engines, families=families
+    )(jnp.asarray(records, jnp.float32))
 
 
 def eval_forest_sharded(

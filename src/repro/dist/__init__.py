@@ -28,6 +28,7 @@ from repro.dist.plan import (
     ForestWorkload,
     MeshCostModel,
     ShardPlan,
+    calibrate_mesh_cost,
     enumerate_plans,
     make_plan,
     plan_forest,
@@ -44,6 +45,7 @@ __all__ = [
     "ShardedForestEvaluator",
     "StreamStats",
     "StreamingChunker",
+    "calibrate_mesh_cost",
     "enumerate_plans",
     "make_plan",
     "plan_forest",

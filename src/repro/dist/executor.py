@@ -7,10 +7,13 @@ Lowering maps the planner's symbols onto ``shard_map``:
   G = plan.tree_shards   → mesh axis ``"trees"``: each device row holds T/G
       stacked tree encodings (the forest analogue of the paper's replicated
       constant-memory tree).
-  per-shard kernel       → resolved through :class:`repro.tune.TunedEvaluator`
-      at the *shard* shape (M/R, N, A, d), so the autotuner stays the single
-      selection point; the winning candidate's (algorithm, jump mode, jump
-      count) lowers via its array-level formulation
+  per-shard kernel       → resolved through ``repro.tune`` at the *shard*
+      operating point, forest-first: the ForestShape bucket (M/R records ×
+      T/G trees) is consulted for a stored shared-family winner, falling
+      back to the per-tree chain (:class:`repro.tune.TunedEvaluator`) at
+      the shard record shape — the autotuner stays the single selection
+      point; the winning candidate's (algorithm, jump mode, jump count)
+      lowers via its array-level formulation
       (:func:`repro.core.eval_speculative.eval_speculative` /
       :func:`repro.core.eval_dataparallel.eval_data_parallel`) inside the
       shard body, vmapped over the local tree axis.
@@ -27,6 +30,7 @@ the path at all).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from functools import partial
 
 import jax
@@ -92,17 +96,21 @@ class ShardedForestEvaluator:
         self.resolved = None          # (Candidate, source) provenance
         self.stats = DistStats()
         self._fast: dict[int, tuple] = {}   # M → (fn, m_pad, t_pad, tree_args)
-        self._single_evs: list | None = None  # 1-device path: per-tree evaluators
+        self._forest_ev = None        # lazy ForestTunedEvaluator (single selection point)
+        # swap generation: a _build() racing invalidate_resolution() must not
+        # re-install its pre-promotion kernel (same guard as the evaluators)
+        self._swap_lock = threading.Lock()
+        self._gen = 0
 
     # -- planning -----------------------------------------------------------
 
     def _measured_d_mu(self, rec: np.ndarray, sample: int = 128) -> float:
-        """Forest d_µ: measured mean over a few trees × a record sample."""
-        from repro.tune.heuristic import measured_d_mu
+        """Forest d_µ: measured mean over a few trees × a record sample
+        (delegates to the shared helper so the planner and the forest
+        heuristic read the same measurement)."""
+        from repro.tune.heuristic import measured_forest_d_mu
 
-        sub = rec[:sample]
-        trees = range(min(self.forest.n_trees, 4))
-        return float(np.mean([measured_d_mu(self.forest.tree(i), sub) for i in trees]))
+        return measured_forest_d_mu(self.forest, rec, sample=sample)
 
     def _prepare(self, rec) -> None:
         if self.plan is not None:
@@ -132,17 +140,135 @@ class ShardedForestEvaluator:
 
     # -- lowering -----------------------------------------------------------
 
-    def _shard_kernel(self, m_shard: int, n_attrs: int, rec_host: np.ndarray):
+    def _forest_evaluator(self):
+        """The lazily built :class:`repro.tune.ForestTunedEvaluator`.
+
+        One evaluator serves both roles: the whole single-device path (the
+        plain tuned forest call, all three candidate families available)
+        and, on a mesh, the depth-profile metadata the per-shard resolution
+        keys its forest buckets with.
+        """
+        if self._forest_ev is None:
+            from repro.tune import ForestTunedEvaluator
+
+            self._forest_ev = ForestTunedEvaluator(
+                self.forest,
+                cache=self.cache,
+                autotune=self.autotune,
+                engines=self.engines,
+            )
+        return self._forest_ev
+
+    def invalidate_resolution(self) -> None:
+        """Drop kernel-resolution state; the next call re-reads the tune cache.
+
+        The serve engines' background re-tune promotes a freshly measured
+        winner by writing it to the shared cache and calling this — an
+        atomic swap from the caller's view (in-flight calls finish on the
+        old kernel, subsequent calls resolve the new one).  The (R, G) plan
+        is kept: re-planning is a separate concern (see ROADMAP).
+        """
+        with self._swap_lock:
+            self._gen += 1
+            self._fast.clear()
+        if self._forest_ev is not None:
+            self._forest_ev.invalidate()
+
+    def retune(self, records, *, warmup: int = 1, iters: int = 3):
+        """Re-measure the kernel choice at this executor's operating point.
+
+        The measurement must land under the key the next resolution will
+        actually probe, which depends on the plan:
+
+        * one device — the full forest-family sweep at the batch shape; the
+          winner lands under the forest bucket key the
+          :class:`~repro.tune.ForestTunedEvaluator` resolves;
+        * a mesh — the shared (vmap) candidates are timed at the *shard*
+          operating point (M/R records × T/G trees, the shapes the shard
+          bodies really run) and the winner is stored under the exact
+          shard-shape key :meth:`_shard_kernel` looks up on its next build.
+
+        Called from the serve engines' background re-tune worker; follow
+        with :meth:`invalidate_resolution` to promote the stored winner.
+
+        Returns:
+          The winning :class:`repro.tune.TuneEntry`.
+        """
+        from repro.tune.measure import tune_forest_workload
+        from repro.tune.space import ForestShape
+
+        rec = np.asarray(records, np.float32)
+        self._prepare(jnp.asarray(rec))
+        if self.plan.n_devices == 1:
+            entry, _ = tune_forest_workload(
+                rec, self.forest, cache=self.cache, engines=self.engines,
+                warmup=warmup, iters=iters, autotune_trees=True,
+            )
+            return entry
+
+        plan, forest = self.plan, self.forest
+        m_pad = shd.pad_to_multiple(max(rec.shape[0], plan.record_shards), plan.record_shards)
+        m_shard = m_pad // plan.record_shards
+        t_shard = shd.pad_to_multiple(forest.n_trees, plan.tree_shards) // plan.tree_shards
+        sample = np.zeros((m_shard, rec.shape[1]), np.float32)
+        rows = min(rec.shape[0], m_shard)
+        sample[:rows] = rec[:rows]
+        # forest.tree(i) returns the already common-padded encoding, so the
+        # sub-forest keeps the full forest's node count
+        sub = EncodedForest([forest.tree(i % forest.n_trees) for i in range(t_shard)])
+        entry, _ = tune_forest_workload(
+            sample, sub, cache=None, engines=self.engines, families=("vmap",),
+            warmup=warmup, iters=iters, store=False,
+        )
+        fev = self._forest_evaluator()
+        fshape = ForestShape(
+            t=t_shard, m=m_shard, n_nodes=int(forest.n_nodes), n_attrs=int(rec.shape[1]),
+            depth_min=fev.depth_min, depth_max=fev.depth_max,
+        )
+        self.cache.store(fshape.key(), entry)
+        return entry
+
+    def _shard_kernel(self, m_shard: int, t_shard: int, n_attrs: int, rec_host: np.ndarray):
         """Resolve the per-shard kernel through repro.tune; return array fn.
 
-        The TunedEvaluator sees a representative shard-shaped sample, so its
-        memo/cache/autotune/heuristic chain answers for the shape the device
-        actually runs.  The candidate's algorithm, jump mode and jump count
-        lower via the array-level evaluators (a Pallas winner lowers via its
-        algorithm's jnp formulation — the kernel launch itself is per-device
-        work that ``shard_map`` bodies express as plain traced ops).
+        Resolution is forest-first: a :class:`repro.tune.space.ForestShape`
+        bucket at the shard operating point (M/R records × T/G trees) is
+        looked up in the shared cache, and a stored shared-family winner
+        (vmap/fused) supplies the algorithm, jump mode and jump count.  On a
+        miss — or a ``per_tree`` winner, which has no single-kern lowering
+        inside a ``shard_map`` body — resolution falls back to the per-tree
+        chain at the shard record shape (memo → cache → autotune →
+        heuristic), exactly the PR 3 behaviour.  Either way the winning
+        candidate lowers via its algorithm's array-level formulation
+        (:func:`repro.core.eval_speculative.eval_speculative` /
+        :func:`repro.core.eval_dataparallel.eval_data_parallel`) — the
+        kernel launch itself is per-device work that ``shard_map`` bodies
+        express as plain traced ops — vmapped over the local tree axis.
         """
+        from repro.kernels.tree_eval.ops import FOREST_VARIANTS, get_forest_variant
         from repro.tune import TunedEvaluator
+        from repro.tune.space import Candidate, ForestShape, backend_tag
+
+        depth = max(int(self.forest.max_depth), 1)
+        fev = self._forest_evaluator()
+        fshape = ForestShape(
+            t=t_shard, m=m_shard, n_nodes=int(self.forest.n_nodes), n_attrs=n_attrs,
+            depth_min=fev.depth_min, depth_max=fev.depth_max,
+        )
+        entry = self.cache.lookup(fshape.key(backend_tag()))
+        if entry is not None and entry.variant in FOREST_VARIANTS:
+            spec = get_forest_variant(entry.variant)
+            cand = Candidate.make(entry.variant, **entry.params)
+            self.resolved = (cand, "cache")
+            self.stats.resolve_source = "cache"
+            if spec.algorithm == "data_parallel":
+                return partial(eval_data_parallel, max_depth=depth)
+            return partial(
+                eval_speculative,
+                max_depth=depth,
+                jumps_per_round=int(entry.params.get("jumps_per_round", 2)),
+                use_onehot_matmul=(spec.jump_mode == "onehot"),
+            )
 
         sample = np.zeros((m_shard, n_attrs), np.float32)
         rows = min(rec_host.shape[0], m_shard)
@@ -153,14 +279,13 @@ class ShardedForestEvaluator:
             autotune=self.autotune,
             engines=self.engines,
         )
-        ev.depth = max(int(self.forest.max_depth), 1)
+        ev.depth = depth
         cand, source = ev.resolve(sample)
         self.resolved = (cand, source)
         self.stats.resolve_source = source
 
         spec = get_variant(cand.variant)
         params = cand.param_dict
-        depth = max(int(self.forest.max_depth), 1)
         if spec.algorithm == "data_parallel":
             return partial(eval_data_parallel, max_depth=depth)
         return partial(
@@ -189,7 +314,9 @@ class ShardedForestEvaluator:
             pad_t(forest.child, jnp.int32),
             pad_t(forest.class_val, jnp.int32),
         )
-        kern = self._shard_kernel(m_pad // plan.record_shards, n_attrs, rec_host)
+        kern = self._shard_kernel(
+            m_pad // plan.record_shards, t_pad // plan.tree_shards, n_attrs, rec_host
+        )
 
         def body(r, ai, ti, ci, ki):
             # r: (M/R, A) local records; tree tables: (T/G, N) local stack
@@ -215,7 +342,17 @@ class ShardedForestEvaluator:
     # -- evaluation ---------------------------------------------------------
 
     def __call__(self, records) -> jax.Array:
-        """Per-tree class assignments, shape (T, M); async (not blocked)."""
+        """Evaluate the forest over a record batch across the mesh.
+
+        Args:
+          records: (M, A) float array (converted to float32 on device).
+
+        Returns:
+          (T, M) int32 per-tree class assignments — *asynchronously*: the
+          result is not blocked on the device, so callers (stream chunker,
+          serve engines, benches) own synchronisation, which is what lets
+          chunk transfer overlap evaluation.
+        """
         if not (isinstance(records, jax.Array) and records.dtype == jnp.float32):
             records = jnp.asarray(records, jnp.float32)
         self._prepare(records)
@@ -224,26 +361,20 @@ class ShardedForestEvaluator:
         self.stats.records += int(m)
 
         if self.plan.n_devices == 1:
-            # single-device fallback: the plain tuned path, no shard_map.
-            # Per-tree TunedEvaluators are built once — their internal memo
-            # makes steady-state calls (serve waves, stream chunks) pure
-            # dict probes, same as eval_forest_tuned with a reused cache.
-            if self._single_evs is None:
-                from repro.tune import TunedEvaluator
-
-                self._single_evs = [
-                    TunedEvaluator(
-                        self.forest.tree(i),
-                        cache=self.cache, autotune=self.autotune, engines=self.engines,
-                    )
-                    for i in range(self.forest.n_trees)
-                ]
-            return jnp.stack([ev(records) for ev in self._single_evs])
+            # single-device fallback: the plain forest-tuned path, no
+            # shard_map.  The ForestTunedEvaluator is built once — its
+            # internal memo makes steady-state calls (serve waves, stream
+            # chunks) pure dict probes, and the fused stacked-kernel
+            # candidate stays in play, same as eval_forest_tuned.
+            return self._forest_evaluator()(records)
 
         fast = self._fast.get(m)
         if fast is None:
+            gen = self._gen
             fast = self._build(m, int(records.shape[1]), np.asarray(records))
-            self._fast[m] = fast
+            with self._swap_lock:
+                if gen == self._gen:   # don't cache a pre-swap resolution
+                    self._fast[m] = fast
         fn, m_pad, t_pad, tree_args = fast
         padded = (
             records

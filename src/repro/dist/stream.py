@@ -99,7 +99,21 @@ class StreamingChunker:
 
 def stream_eval_forest(forest, records, *, chunk_records: int = 65536, inflight: int = 2,
                        stats: StreamStats | None = None, **evaluator_kw) -> np.ndarray:
-    """One-shot convenience: sharded + chunked forest evaluation, (T, M)."""
+    """One-shot convenience: sharded + chunked forest evaluation.
+
+    Args:
+      forest: an ``EncodedForest`` (or list of encoded trees).
+      records: (M, A) float batch, arbitrarily large — chunks of
+        ``chunk_records`` stream through the sharded executor with at most
+        ``inflight`` pending (double buffering at the default of 2).
+      stats: optional :class:`StreamStats` to accumulate into.
+      **evaluator_kw: forwarded to :class:`ShardedForestEvaluator`
+        (``mesh``/``plan``/``decomposition``/``cache``/``autotune``/…).
+
+    Returns:
+      Host (T, M) int32 per-tree class assignments, bit-identical to the
+      monolithic ``eval_forest_tuned`` call.
+    """
     from repro.dist.executor import ShardedForestEvaluator
 
     ev = ShardedForestEvaluator(forest, **evaluator_kw)

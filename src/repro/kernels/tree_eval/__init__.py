@@ -1,25 +1,41 @@
 """TPU Pallas kernels for the paper's tree-evaluation hot spot."""
 
 from repro.kernels.tree_eval.ops import (
+    FOREST_VARIANTS,
+    PER_TREE_FAMILY,
     VARIANTS,
+    ForestVariantSpec,
+    PackedForest,
     PackedTree,
     VariantSpec,
     forest_eval,
+    forest_eval_fused,
+    get_forest_variant,
     get_variant,
+    list_forest_variants,
     list_variants,
+    register_forest_variant,
     register_variant,
     tree_eval,
 )
 from repro.kernels.tree_eval.ref import forest_eval_ref, tree_eval_ref
 
 __all__ = [
+    "FOREST_VARIANTS",
+    "ForestVariantSpec",
+    "PER_TREE_FAMILY",
+    "PackedForest",
     "PackedTree",
     "VARIANTS",
     "VariantSpec",
     "forest_eval",
+    "forest_eval_fused",
     "forest_eval_ref",
+    "get_forest_variant",
     "get_variant",
+    "list_forest_variants",
     "list_variants",
+    "register_forest_variant",
     "register_variant",
     "tree_eval",
     "tree_eval_ref",

@@ -26,6 +26,15 @@ tables use broadcast BlockSpecs (index_map → block 0) so they are DMA'd into
 VMEM once and reused across grid steps — the analogue of the paper's constant
 memory.  All shapes are padded by ``ops.py`` so that M % block_m == 0,
 N % 128 == 0 and A % 128 == 0 (MXU alignment).
+
+``fused_speculative_pallas`` / ``fused_data_parallel_pallas`` lift the same
+bodies to a whole *forest* in one launch: tree tables are stacked to (T, N)
+(attr-select to (T, A, N)) and the grid gains a tree axis —
+``(M/block_m, T)`` with trees innermost, so each record tile stays resident
+in VMEM while the T tree tables stream past it.  One launch replaces the T
+separate launches of the per-tree path, which is where the fused forest
+variant wins: the per-launch overhead is paid once and the record DMA is
+amortised across the forest.
 """
 
 from __future__ import annotations
@@ -66,23 +75,19 @@ def _onehot_matvec(idx: jax.Array, table_row: jax.Array, dtype=jnp.float32) -> j
 # ---------------------------------------------------------------------------
 
 
-def _speculative_body(
-    records_ref,      # (BM, A) VMEM
-    attr_sel_ref,     # (A, N) VMEM — one-hot attribute selection
-    threshold_ref,    # (1, N) VMEM
-    child_ref,        # (1, N) VMEM
-    class_val_ref,    # (1, N) VMEM
-    out_ref,          # (BM, 1) VMEM
+def _speculative_compute(
+    rec,        # (BM, A) f32
+    sel,        # (A, N) f32 one-hot attribute selection
+    thr,        # (1, N) f32
+    child,      # (1, N) i32
+    class_val,  # (1, N) i32
     *,
     total_jumps: int,
     jump_mode: str,
 ):
-    rec = records_ref[...].astype(jnp.float32)
-    sel = attr_sel_ref[...].astype(jnp.float32)
+    """Procedure 4/5 core on VMEM-resident arrays; returns (BM, 1) int32."""
     # --- node evaluation: every node, every record, one MXU matmul ---
     vals = jnp.dot(rec, sel, preferred_element_type=jnp.float32)   # (BM, N)
-    thr = threshold_ref[...]                                       # (1, N)
-    child = child_ref[...]                                         # (1, N)
     pred = (vals > thr).astype(jnp.int32)
     path = child + pred                                            # (BM, N)
 
@@ -102,8 +107,30 @@ def _speculative_body(
 
     # --- root's eventual successor is the terminal leaf; read its class ---
     root_leaf = path[:, 0:1]                                       # (BM, 1)
-    out_ref[...] = _lane_gather(class_val_ref[...], root_leaf) if jump_mode == "gather" else (
-        _onehot_matvec(root_leaf, class_val_ref[...]).astype(jnp.int32)
+    if jump_mode == "gather":
+        return _lane_gather(class_val, root_leaf)
+    return _onehot_matvec(root_leaf, class_val).astype(jnp.int32)
+
+
+def _speculative_body(
+    records_ref,      # (BM, A) VMEM
+    attr_sel_ref,     # (A, N) VMEM — one-hot attribute selection
+    threshold_ref,    # (1, N) VMEM
+    child_ref,        # (1, N) VMEM
+    class_val_ref,    # (1, N) VMEM
+    out_ref,          # (BM, 1) VMEM
+    *,
+    total_jumps: int,
+    jump_mode: str,
+):
+    out_ref[...] = _speculative_compute(
+        records_ref[...].astype(jnp.float32),
+        attr_sel_ref[...].astype(jnp.float32),
+        threshold_ref[...],
+        child_ref[...],
+        class_val_ref[...],
+        total_jumps=total_jumps,
+        jump_mode=jump_mode,
     )
 
 
@@ -148,6 +175,27 @@ def speculative_pallas(
 # ---------------------------------------------------------------------------
 
 
+def _data_parallel_compute(
+    rec,        # (BM, A) f32
+    attr_idx,   # (1, N) i32
+    thr,        # (1, N) f32
+    child,      # (1, N) i32
+    class_val,  # (1, N) i32
+    *,
+    max_depth: int,
+):
+    """Procedure 3 core on VMEM-resident arrays; returns (BM, 1) int32."""
+    bm = rec.shape[0]
+    idx = jnp.zeros((bm, 1), jnp.int32)
+    for _ in range(max_depth):
+        a = _lane_gather(attr_idx, idx)                   # (BM, 1)
+        t = _lane_gather(thr, idx)
+        c = _lane_gather(child, idx)
+        v = jnp.take_along_axis(rec, a, axis=1)           # per-record attr
+        idx = c + (v > t).astype(jnp.int32)
+    return _lane_gather(class_val, idx)
+
+
 def _data_parallel_body(
     records_ref,      # (BM, A) VMEM
     attr_idx_ref,     # (1, N) VMEM (int32)
@@ -158,16 +206,14 @@ def _data_parallel_body(
     *,
     max_depth: int,
 ):
-    rec = records_ref[...].astype(jnp.float32)
-    bm = rec.shape[0]
-    idx = jnp.zeros((bm, 1), jnp.int32)
-    for _ in range(max_depth):
-        a = _lane_gather(attr_idx_ref[...], idx)          # (BM, 1)
-        t = _lane_gather(threshold_ref[...], idx)
-        c = _lane_gather(child_ref[...], idx)
-        v = jnp.take_along_axis(rec, a, axis=1)           # per-record attr
-        idx = c + (v > t).astype(jnp.int32)
-    out_ref[...] = _lane_gather(class_val_ref[...], idx)
+    out_ref[...] = _data_parallel_compute(
+        records_ref[...].astype(jnp.float32),
+        attr_idx_ref[...],
+        threshold_ref[...],
+        child_ref[...],
+        class_val_ref[...],
+        max_depth=max_depth,
+    )
 
 
 def data_parallel_pallas(
@@ -198,5 +244,128 @@ def data_parallel_pallas(
         ],
         out_specs=pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        interpret=interpret,
+    )(records, attr_idx, threshold, child, class_val)
+
+
+# ---------------------------------------------------------------------------
+# fused stacked-forest kernels (one launch for T trees)
+# ---------------------------------------------------------------------------
+#
+# Grid (M/block_m, T): the record-tile axis is outer and the tree axis inner,
+# so consecutive grid steps revisit the same record block (no re-DMA) while
+# the (1, N)-blocked tree tables stream through VMEM one tree at a time.
+# Output lands as (T, M, 1) blocks of (1, BM, 1) — the trailing singleton
+# keeps the write a pure leading-axis expand of the per-tree (BM, 1) result,
+# no cross-lane relayout.
+
+
+def _fused_speculative_body(
+    records_ref,      # (BM, A) VMEM — shared across the tree axis
+    attr_sel_ref,     # (1, A, N) VMEM — tree t's one-hot selection
+    threshold_ref,    # (1, N) VMEM
+    child_ref,        # (1, N) VMEM
+    class_val_ref,    # (1, N) VMEM
+    out_ref,          # (1, BM, 1) VMEM
+    *,
+    total_jumps: int,
+    jump_mode: str,
+):
+    out_ref[...] = _speculative_compute(
+        records_ref[...].astype(jnp.float32),
+        attr_sel_ref[0].astype(jnp.float32),
+        threshold_ref[...],
+        child_ref[...],
+        class_val_ref[...],
+        total_jumps=total_jumps,
+        jump_mode=jump_mode,
+    )[None]
+
+
+def fused_speculative_pallas(
+    records: jax.Array,     # (M, A) — padded
+    attr_select: jax.Array, # (T, A, N) — per-tree padded one-hot
+    threshold: jax.Array,   # (T, N)
+    child: jax.Array,       # (T, N)
+    class_val: jax.Array,   # (T, N)
+    *,
+    total_jumps: int,
+    block_m: int,
+    jump_mode: str = "gather",
+    interpret: bool = True,
+) -> jax.Array:
+    """One speculative launch over the whole forest. Returns (T, M, 1)."""
+    m, a = records.shape
+    t, n = threshold.shape
+    assert m % block_m == 0, (m, block_m)
+    grid = (m // block_m, t)
+    kernel = functools.partial(
+        _fused_speculative_body, total_jumps=total_jumps, jump_mode=jump_mode
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, a), lambda i, j: (i, 0)),   # record tile: VMEM-resident per i
+            pl.BlockSpec((1, a, n), lambda i, j: (j, 0, 0)),   # tree tables: stream over j
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, 1), lambda i, j: (j, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, m, 1), jnp.int32),
+        interpret=interpret,
+    )(records, attr_select, threshold, child, class_val)
+
+
+def _fused_data_parallel_body(
+    records_ref,      # (BM, A) VMEM
+    attr_idx_ref,     # (1, N) VMEM (int32)
+    threshold_ref,    # (1, N) VMEM
+    child_ref,        # (1, N) VMEM
+    class_val_ref,    # (1, N) VMEM
+    out_ref,          # (1, BM, 1)
+    *,
+    max_depth: int,
+):
+    out_ref[...] = _data_parallel_compute(
+        records_ref[...].astype(jnp.float32),
+        attr_idx_ref[...],
+        threshold_ref[...],
+        child_ref[...],
+        class_val_ref[...],
+        max_depth=max_depth,
+    )[None]
+
+
+def fused_data_parallel_pallas(
+    records: jax.Array,    # (M, A) padded
+    attr_idx: jax.Array,   # (T, N)
+    threshold: jax.Array,  # (T, N)
+    child: jax.Array,      # (T, N)
+    class_val: jax.Array,  # (T, N)
+    *,
+    max_depth: int,
+    block_m: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """One data-parallel launch over the whole forest. Returns (T, M, 1)."""
+    m, a = records.shape
+    t, n = threshold.shape
+    assert m % block_m == 0, (m, block_m)
+    grid = (m // block_m, t)
+    kernel = functools.partial(_fused_data_parallel_body, max_depth=max_depth)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, a), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, 1), lambda i, j: (j, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, m, 1), jnp.int32),
         interpret=interpret,
     )(records, attr_idx, threshold, child, class_val)

@@ -190,6 +190,143 @@ def forest_eval(
     return jnp.stack([tree_eval(records, t, **kw) for t in trees])
 
 
+class PackedForest:
+    """Device-ready stacked padded tables for the fused forest kernels.
+
+    All T trees are padded to one lane-aligned node count (phantom self-loop
+    leaves, §3.2) and their tables stacked along a leading tree axis:
+    ``attr_select`` (T, A_pad, N_pad), the scalar tables (T, N_pad).  The
+    fused kernels then evaluate the whole forest in one launch with the tree
+    axis on the grid.
+
+    Args:
+      forest: an :class:`repro.core.forest.EncodedForest` (trees already
+        stacked at a common logical node count) — or anything exposing its
+        ``n_trees`` / ``n_nodes`` / ``max_depth`` / ``tree(i)`` surface.
+      n_attrs: record attribute count A (pre-padding).
+      max_depth: depth bound over the forest; default ``forest.max_depth``.
+    """
+
+    def __init__(self, forest, n_attrs: int, *, max_depth: int | None = None):
+        self.n_trees = int(forest.n_trees)
+        self.logical_nodes = int(forest.n_nodes)
+        self.n_attrs = n_attrs
+        self.max_depth = int(max_depth if max_depth is not None else forest.max_depth)
+        n_pad = _round_up(self.logical_nodes, LANE)
+        a_pad = _round_up(n_attrs, LANE)
+        penc = [pad_tree(forest.tree(i), n_pad) for i in range(self.n_trees)]
+        sel = np.zeros((self.n_trees, a_pad, n_pad), np.float32)
+        for i, p in enumerate(penc):
+            sel[i, :n_attrs] = attr_select_matrix(p, n_attrs)
+        self.n_nodes = n_pad
+        self.n_attrs_padded = a_pad
+        self.attr_select = jnp.asarray(sel)
+        self.attr_idx = jnp.asarray(np.stack([p.attr_idx for p in penc]), jnp.int32)
+        self.threshold = jnp.asarray(np.stack([p.threshold for p in penc]), jnp.float32)
+        self.child = jnp.asarray(np.stack([p.child for p in penc]), jnp.int32)
+        self.class_val = jnp.asarray(np.stack([p.class_val for p in penc]), jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("algorithm", "block_m", "jump_mode", "jumps", "max_depth", "interpret"),
+)
+def _forest_eval_padded(
+    records,
+    attr_select,
+    attr_idx,
+    threshold,
+    child,
+    class_val,
+    *,
+    algorithm: str,
+    block_m: int,
+    jump_mode: str,
+    jumps: int,
+    max_depth: int,
+    interpret: bool,
+):
+    if algorithm == "speculative":
+        out = _k.fused_speculative_pallas(
+            records,
+            attr_select,
+            threshold,
+            child,
+            class_val,
+            total_jumps=jumps,
+            block_m=block_m,
+            jump_mode=jump_mode,
+            interpret=interpret,
+        )
+    elif algorithm == "data_parallel":
+        out = _k.fused_data_parallel_pallas(
+            records,
+            attr_idx,
+            threshold,
+            child,
+            class_val,
+            max_depth=max_depth,
+            block_m=block_m,
+            interpret=interpret,
+        )
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    return out[:, :, 0]
+
+
+def forest_eval_fused(
+    records,
+    forest: "PackedForest | object",
+    *,
+    n_attrs: int | None = None,
+    algorithm: str = "speculative",
+    jump_mode: str = "gather",
+    block_m: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Evaluate a whole forest with one fused Pallas launch.
+
+    Args:
+      records: (M, A) float array (any float dtype; compared in f32).
+      forest: an ``EncodedForest`` (packed internally) or prebuilt
+        :class:`PackedForest`.
+      algorithm: "speculative" (Procedure 4/5) or "data_parallel" (Procedure 3).
+      jump_mode: "gather" | "onehot" pointer-jump implementation.
+      block_m: records per tile; default = VMEM-model choice.
+      interpret: force Pallas interpret mode; default = auto (True off-TPU).
+
+    Returns:
+      (T, M) int32 per-tree class assignments, bit-identical to running
+      :func:`tree_eval` tree by tree.
+    """
+    if not isinstance(forest, PackedForest):
+        if n_attrs is None:
+            n_attrs = int(np.asarray(records).shape[-1])
+        forest = PackedForest(forest, n_attrs)
+    if interpret is None:
+        interpret = not on_tpu()
+    if block_m is None:
+        block_m = choose_block_m(forest.n_nodes, forest.n_attrs_padded, jump_mode=jump_mode)
+    records = jnp.asarray(records)
+    padded, m = _pad_records(records, block_m, forest.n_attrs_padded)
+    jumps = max(1, math.ceil(math.log2(max(forest.max_depth, 2))))
+    out = _forest_eval_padded(
+        padded,
+        forest.attr_select,
+        forest.attr_idx,
+        forest.threshold,
+        forest.child,
+        forest.class_val,
+        algorithm=algorithm,
+        block_m=block_m,
+        jump_mode=jump_mode,
+        jumps=jumps,
+        max_depth=forest.max_depth,
+        interpret=interpret,
+    )
+    return out[:, :m]
+
+
 # ---------------------------------------------------------------------------
 # Variant registry (consumed by repro.tune)
 # ---------------------------------------------------------------------------
@@ -325,3 +462,162 @@ register_variant(
         fn=_jnp_data_parallel_fn,
     )
 )
+
+
+# ---------------------------------------------------------------------------
+# Forest variant registry (consumed by repro.tune's forest-level tuner)
+# ---------------------------------------------------------------------------
+#
+# A *forest* variant evaluates all T trees of a stacked forest at once with a
+# uniform calling convention:
+#
+#     fn(records, forest, *, max_depth: int, **params) -> (T, M) int32
+#
+# where ``forest`` is an EncodedForest (or PackedForest for the fused
+# family).  Two families are registered here; the third family the forest
+# tuner considers — ``per_tree``, a vector of per-tree winners — is not a
+# single callable and lives in ``repro.tune.dispatch.ForestTunedEvaluator``.
+
+# Family name the forest tuner uses for the per-tree-variant-vector path;
+# kept here so the cache vocabulary is defined next to the registry.
+PER_TREE_FAMILY = "per_tree"
+
+
+@dataclasses.dataclass(frozen=True)
+class ForestVariantSpec:
+    """One whole-forest evaluator plus the knobs the tuner may sweep.
+
+    Attributes:
+      name: registry key, e.g. ``"forest_fused_speculative_onehot"``.
+      family: "fused" (one Pallas launch, tree axis on the grid) or "vmap"
+        (the stacked jnp formulation ``vmap``-ed over the tree axis).
+      algorithm: "speculative" or "data_parallel" (§3.6 T₅ vs T₃ per shard).
+      engine: "pallas" or "jnp" (same meaning as :class:`VariantSpec`).
+      jump_mode: "gather" | "onehot" node-evaluation/jump formulation.
+      tunables: names of the free parameters, e.g. ("block_m",).
+      fn: the evaluator callable (uniform signature above).
+    """
+
+    name: str
+    family: str
+    algorithm: str
+    engine: str
+    jump_mode: str
+    tunables: tuple[str, ...]
+    fn: Callable
+
+
+FOREST_VARIANTS: dict[str, ForestVariantSpec] = {}
+
+
+def register_forest_variant(spec: ForestVariantSpec) -> ForestVariantSpec:
+    if spec.name in FOREST_VARIANTS:
+        raise ValueError(f"forest variant {spec.name!r} already registered")
+    FOREST_VARIANTS[spec.name] = spec
+    return spec
+
+
+def get_forest_variant(name: str) -> ForestVariantSpec:
+    try:
+        return FOREST_VARIANTS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown forest variant {name!r}; registered: {sorted(FOREST_VARIANTS)}"
+        ) from None
+
+
+def list_forest_variants(
+    *, engine: str | None = None, family: str | None = None
+) -> list[ForestVariantSpec]:
+    out = [
+        s
+        for s in FOREST_VARIANTS.values()
+        if (engine is None or s.engine == engine)
+        and (family is None or s.family == family)
+    ]
+    return sorted(out, key=lambda s: s.name)
+
+
+def _forest_tables(forest):
+    return (
+        jnp.asarray(forest.attr_idx, jnp.int32),
+        jnp.asarray(forest.threshold, jnp.float32),
+        jnp.asarray(forest.child, jnp.int32),
+        jnp.asarray(forest.class_val, jnp.int32),
+    )
+
+
+def _vmap_speculative_fn(jump_mode: str) -> Callable:
+    def fn(records, forest, *, max_depth, **params):
+        from repro.core.eval_speculative import eval_speculative
+
+        rec = jnp.asarray(records, jnp.float32)
+        jumps = int(params.get("jumps_per_round", 2))
+
+        def one(a, t, c, k):
+            return eval_speculative(
+                rec, a, t, c, k,
+                max_depth=max_depth,
+                jumps_per_round=jumps,
+                use_onehot_matmul=(jump_mode == "onehot"),
+            )
+
+        return jax.vmap(one)(*_forest_tables(forest))
+
+    return fn
+
+
+def _vmap_data_parallel_fn(records, forest, *, max_depth, **params):
+    from repro.core.eval_dataparallel import eval_data_parallel
+
+    del params
+    rec = jnp.asarray(records, jnp.float32)
+
+    def one(a, t, c, k):
+        return eval_data_parallel(rec, a, t, c, k, max_depth=max_depth)
+
+    return jax.vmap(one)(*_forest_tables(forest))
+
+
+def _fused_fn(algorithm: str, jump_mode: str) -> Callable:
+    def fn(records, forest, *, max_depth=None, **params):
+        del max_depth  # PackedForest derives it from the encodings
+        return forest_eval_fused(
+            records,
+            forest,
+            algorithm=algorithm,
+            jump_mode=jump_mode,
+            block_m=params.get("block_m"),
+        )
+
+    return fn
+
+
+for _alg, _jm in (("speculative", "gather"), ("speculative", "onehot"), ("data_parallel", "gather")):
+    _suffix = f"_{_jm}" if _alg == "speculative" else ""
+    register_forest_variant(
+        ForestVariantSpec(
+            name=f"forest_fused_{_alg}" + _suffix,
+            family="fused",
+            algorithm=_alg,
+            engine="pallas",
+            jump_mode=_jm,
+            tunables=("block_m",),
+            fn=_fused_fn(_alg, _jm),
+        )
+    )
+    register_forest_variant(
+        ForestVariantSpec(
+            name=f"forest_vmap_{_alg}" + _suffix,
+            family="vmap",
+            algorithm=_alg,
+            engine="jnp",
+            jump_mode=_jm,
+            tunables=("jumps_per_round",) if _alg == "speculative" else (),
+            fn=(
+                _vmap_speculative_fn(_jm)
+                if _alg == "speculative"
+                else _vmap_data_parallel_fn
+            ),
+        )
+    )

@@ -1,8 +1,10 @@
 from repro.serve.engine import (
+    BackgroundRetuner,
     EngineStats,
     ForestEngineStats,
     ForestServeEngine,
     Request,
+    RetunePolicy,
     ServeEngine,
     TreeEngineStats,
     TreeRequest,

@@ -18,9 +18,10 @@ share one length (shorter prompts are left-padded by the caller or the
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -119,6 +120,102 @@ class ServeEngine:
 
 
 # ---------------------------------------------------------------------------
+# Background re-tune policy (hot-bucket re-measurement, off the request path)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RetunePolicy:
+    """When and how a serve engine re-measures hot shape buckets.
+
+    The tune-on-first-miss policy (``autotune=True``) blocks the first wave
+    of every new bucket on a full measurement sweep — fine for benches,
+    wrong for serving.  Under this policy the engine resolves new buckets
+    instantly (cache hit or §3.6 heuristic) and *promotes* buckets that
+    prove hot: once a bucket has served ``hot_waves`` waves, a background
+    thread re-measures its candidate space with the real wave data and
+    atomically swaps the winner in.  Requests never wait on a measurement,
+    and because every candidate is exact, a swap mid-traffic cannot change
+    any result — only its latency.
+
+    Attributes:
+      hot_waves: waves a bucket must serve before it is re-measured.
+      warmup / iters: measurement discipline forwarded to the tuner
+        (kept small — the measurement shares the machine with live traffic).
+      max_concurrent: measurement threads allowed at once; a hot bucket
+        that cannot start immediately retries on its next wave.
+    """
+
+    hot_waves: int = 32
+    warmup: int = 1
+    iters: int = 3
+    max_concurrent: int = 1
+
+
+class BackgroundRetuner:
+    """Drives :class:`RetunePolicy` for one engine: counts bucket hits,
+    launches measurement threads, promotes winners.
+
+    ``measure(batch)`` must run the tuner (persisting the winner to the
+    shared cache) and return the winning entry; ``promote(key, entry)``
+    must atomically swap the engine's evaluator onto it (see
+    ``TunedEvaluator.promote`` / ``ShardedForestEvaluator
+    .invalidate_resolution``).  Both run on the worker thread — the request
+    path only pays a counter increment.
+    """
+
+    def __init__(self, measure: Callable, promote: Callable, policy: RetunePolicy):
+        self.measure = measure
+        self.promote = promote
+        self.policy = policy
+        self.hits: dict[str, int] = {}
+        self.started: set[str] = set()
+        self.done: list[tuple[str, object]] = []     # (bucket key, winning entry)
+        self.errors: list[tuple[str, Exception]] = []
+        self._threads: list[threading.Thread] = []
+        self._lock = threading.Lock()
+
+    def note(self, key: str, batch: np.ndarray) -> None:
+        """Record one served wave for ``key``; maybe launch a re-tune."""
+        with self._lock:
+            n = self.hits[key] = self.hits.get(key, 0) + 1
+            if n < self.policy.hot_waves or key in self.started:
+                return
+            self._threads = [t for t in self._threads if t.is_alive()]
+            if len(self._threads) >= self.policy.max_concurrent:
+                return  # retried on the bucket's next wave
+            self.started.add(key)
+            snap = np.array(batch, copy=True)  # the wave buffer is reused
+            th = threading.Thread(
+                target=self._work, args=(key, snap), daemon=True, name=f"retune:{key}"
+            )
+            self._threads.append(th)
+        th.start()
+
+    def _work(self, key: str, batch: np.ndarray) -> None:
+        try:
+            entry = self.measure(batch)
+            self.promote(key, entry)
+            with self._lock:
+                self.done.append((key, entry))
+        except Exception as e:  # a failed re-tune must never take serving down
+            with self._lock:
+                self.errors.append((key, e))
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Join outstanding measurement threads (tests / shutdown)."""
+        with self._lock:
+            threads = list(self._threads)
+        for t in threads:
+            t.join(timeout)
+
+    @property
+    def retunes(self) -> int:
+        with self._lock:
+            return len(self.done)
+
+
+# ---------------------------------------------------------------------------
 # Tree-classification serving (the paper's workload as a service)
 # ---------------------------------------------------------------------------
 
@@ -152,6 +249,8 @@ class TreeEngineStats:
     records: int = 0
     eval_s: float = 0.0
     padded_record_slots: int = 0   # bucket-padding rows (the wave's idle lanes)
+    retunes: int = 0               # background winner promotions completed
+    bucket_waves: dict = dataclasses.field(default_factory=dict)  # key → waves served
 
 
 class TreeServeEngine:
@@ -159,24 +258,47 @@ class TreeServeEngine:
 
     Requests are coalesced into waves of up to ``max_batch`` records and
     evaluated with one :class:`repro.tune.TunedEvaluator` call, which routes
-    each wave through the cached-best kernel variant for its shape bucket
-    (autotuning on first sight when ``autotune=True``).  Because dispatch
-    pads every wave to its M-bucket, steady-state traffic of jittery batch
-    sizes compiles once per bucket — the serving analogue of the LM engine's
-    fixed-width waves; the padding rows are recorded in the stats as the
-    wave's idle-lane cost.
+    each wave through the cached-best kernel variant for its shape bucket.
+    Because dispatch pads every wave to its M-bucket, steady-state traffic
+    of jittery batch sizes compiles once per bucket — the serving analogue
+    of the LM engine's fixed-width waves; the padding rows are recorded in
+    the stats as the wave's idle-lane cost.
+
+    Kernel selection policy: a new bucket resolves instantly (cache hit or
+    the §3.6 heuristic); buckets that prove *hot* under the ``retune``
+    policy are re-measured on a background thread with real wave data and
+    the winner is swapped in atomically (:class:`RetunePolicy`).  The
+    legacy blocking tune-on-first-miss behaviour remains available as
+    ``autotune=True``.
     """
 
     def __init__(self, tree, *, max_batch: int = 4096, cache=None,
-                 autotune: bool = False, engines=None):
+                 autotune: bool = False, engines=None,
+                 retune: RetunePolicy | None = RetunePolicy()):
         from repro.tune.dispatch import TunedEvaluator
-        from repro.tune.space import WorkloadShape
+        from repro.tune.measure import tune_workload
+        from repro.tune.space import Candidate, WorkloadShape
 
         self._shape_of = WorkloadShape.of
         self._eval = TunedEvaluator(tree, cache=cache, autotune=autotune, engines=engines)
         self.tree = tree
         self.max_batch = max_batch
         self.stats = TreeEngineStats()
+        self.retuner: BackgroundRetuner | None = None
+        if retune is not None:
+
+            def measure(batch):
+                entry, _ = tune_workload(
+                    batch, tree, cache=self._eval.cache, engines=engines,
+                    warmup=retune.warmup, iters=retune.iters,
+                )
+                return entry
+
+            def promote(key, entry):
+                self._eval.promote(key, Candidate.make(entry.variant, **entry.params))
+                self.stats.retunes += 1
+
+            self.retuner = BackgroundRetuner(measure, promote, retune)
 
     def run(self, requests: list[TreeRequest]) -> list[TreeRequest]:
         """Serve all requests in record-count-bounded waves."""
@@ -200,6 +322,10 @@ class TreeServeEngine:
             r.out = out[off:off + m]
             r.done = True
             off += m
+        key = shape.key()
+        self.stats.bucket_waves[key] = self.stats.bucket_waves.get(key, 0) + 1
+        if self.retuner is not None:
+            self.retuner.note(key, batch)
 
 
 # ---------------------------------------------------------------------------
@@ -214,6 +340,8 @@ class ForestEngineStats:
     chunks: int = 0                # streaming chunks across all waves
     eval_s: float = 0.0
     chunk_ms: list = dataclasses.field(default_factory=list)  # per-chunk latency
+    retunes: int = 0               # background winner promotions completed
+    bucket_waves: dict = dataclasses.field(default_factory=dict)  # key → waves served
 
 
 class ForestServeEngine:
@@ -227,11 +355,18 @@ class ForestServeEngine:
     the same accounting ``TreeServeEngine`` keeps per wave, at chunk
     granularity.  With ``n_classes`` set, requests get majority-vote
     classes (m,); otherwise per-tree assignments (T, m).
+
+    Hot forest buckets are re-measured in the background under the
+    ``retune`` policy (all three forest candidate families, real wave
+    data); the freshly stored winner is picked up atomically via
+    ``ShardedForestEvaluator.invalidate_resolution`` — see
+    :class:`RetunePolicy`.
     """
 
     def __init__(self, forest, *, max_batch: int = 65536, chunk_records: int = 8192,
                  n_classes: Optional[int] = None, mesh=None, plan=None,
-                 decomposition=None, cache=None, autotune: bool = False, engines=None):
+                 decomposition=None, cache=None, autotune: bool = False, engines=None,
+                 retune: RetunePolicy | None = RetunePolicy()):
         from repro.dist import ShardedForestEvaluator, StreamingChunker
 
         self._eval = ShardedForestEvaluator(
@@ -243,6 +378,24 @@ class ForestServeEngine:
         self.max_batch = max_batch
         self.n_classes = n_classes
         self.stats = ForestEngineStats()
+        self.retuner: BackgroundRetuner | None = None
+        if retune is not None:
+
+            def measure(batch):
+                # the executor owns key consistency: single-device measures
+                # the forest bucket, a mesh measures the *shard* operating
+                # point — either way the winner lands where the next
+                # resolution looks
+                return self._eval.retune(batch, warmup=retune.warmup, iters=retune.iters)
+
+            def promote(key, entry):
+                # the measurement already stored the winner; dropping
+                # resolution state makes the next wave pick it up — the
+                # executor-level analogue of TunedEvaluator.promote
+                self._eval.invalidate_resolution()
+                self.stats.retunes += 1
+
+            self.retuner = BackgroundRetuner(measure, promote, retune)
 
     @property
     def plan(self):
@@ -280,3 +433,7 @@ class ForestServeEngine:
             r.out = out[off:off + m] if self.n_classes is not None else out[:, off:off + m]
             r.done = True
             off += m
+        key = self._eval._forest_evaluator().shape_of(batch).key()
+        self.stats.bucket_waves[key] = self.stats.bucket_waves.get(key, 0) + 1
+        if self.retuner is not None:
+            self.retuner.note(key, batch)

@@ -10,32 +10,73 @@ instead of hardcoding one evaluator per call site, callers say
 ``tuned_eval(records, tree)`` and the subsystem picks the variant that wins
 *at this shape on this backend*.
 
+Tuning happens at two granularities:
+
+  * **tree** — :class:`TunedEvaluator` / :func:`tuned_eval` pick one kernel
+    variant per (backend, shape-bucket);
+  * **forest** — :class:`ForestTunedEvaluator` / :func:`tuned_eval_forest`
+    pick a *family* per (backend, forest-bucket): per-tree variant vectors,
+    a shared-variant vmap path, or the fused stacked Pallas kernel that
+    evaluates the whole forest in one launch.
+
 Module map (→ paper concept):
 
   space.py      the workload shape (M, N, A, d) the §4 model is written
-                over; shape bucketing; enumeration of valid (variant,
-                parameter) candidates from the kernel registry.
+                over, plus the forest shape (T, M, N_max, A, depth profile);
+                shape bucketing; enumeration of valid (variant, parameter)
+                candidates from the kernel registries.
   measure.py    the paper's measurement discipline (warmup, synchronised
-                timing, medians over repeats) applied to each candidate.
+                timing, medians over repeats) applied to each candidate —
+                per-tree and forest-level.
   cache.py      persistent JSON store of per-(backend, shape-bucket)
                 winners with an in-process LRU front.
   heuristic.py  the §4 closed forms (T₃ vs T₅, equation (1) crossover) as
-                the no-cache fallback policy.
-  dispatch.py   ``tuned_eval`` / ``TunedEvaluator``: memo → cache →
-                optional autotune → heuristic, with bucket-padded batches.
+                the no-cache fallback policy, lifted to the family choice
+                for forests (launch savings vs depth-padding waste).
+  dispatch.py   ``tuned_eval`` / ``TunedEvaluator`` and
+                ``tuned_eval_forest`` / ``ForestTunedEvaluator``: memo →
+                cache → optional autotune → heuristic, with bucket-padded
+                batches and atomic ``promote``/``invalidate`` re-tune hooks.
 
 Every variant is exact, so tuning is purely a performance decision: results
 are bit-identical to the serial branchless reference (Procedure 2).
 """
 
 from repro.tune.cache import TuneCache, TuneEntry, default_cache_path, registry_fingerprint
-from repro.tune.dispatch import TunedEvaluator, tuned_eval
-from repro.tune.heuristic import heuristic_candidate, measured_d_mu, predicted_times
-from repro.tune.measure import Measurement, measure_candidate, time_callable, tune_workload
-from repro.tune.space import Candidate, WorkloadShape, backend_tag, search_space
+from repro.tune.dispatch import (
+    ForestTunedEvaluator,
+    TunedEvaluator,
+    tuned_eval,
+    tuned_eval_forest,
+)
+from repro.tune.heuristic import (
+    forest_heuristic_candidate,
+    heuristic_candidate,
+    measured_d_mu,
+    measured_forest_d_mu,
+    predicted_times,
+)
+from repro.tune.measure import (
+    Measurement,
+    measure_candidate,
+    measure_forest_candidate,
+    time_callable,
+    tune_forest_workload,
+    tune_workload,
+)
+from repro.tune.space import (
+    Candidate,
+    ForestShape,
+    WorkloadShape,
+    backend_tag,
+    forest_search_space,
+    search_space,
+)
 
 __all__ = [
     "Candidate",
+    "ForestShape",
+    "ForestTunedEvaluator",
     "Measurement",
     "TuneCache",
     "TuneEntry",
@@ -43,13 +84,19 @@ __all__ = [
     "WorkloadShape",
     "backend_tag",
     "default_cache_path",
+    "forest_heuristic_candidate",
+    "forest_search_space",
     "heuristic_candidate",
     "measure_candidate",
+    "measure_forest_candidate",
     "measured_d_mu",
+    "measured_forest_d_mu",
     "predicted_times",
     "registry_fingerprint",
     "search_space",
     "time_callable",
+    "tune_forest_workload",
     "tune_workload",
     "tuned_eval",
+    "tuned_eval_forest",
 ]

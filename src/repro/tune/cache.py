@@ -23,6 +23,7 @@ import functools
 import json
 import os
 import tempfile
+import threading
 from collections import OrderedDict
 from pathlib import Path
 from typing import Optional
@@ -48,14 +49,19 @@ def registry_fingerprint() -> str:
     from repro.kernels.tree_eval import ops as _ops
 
     h = hashlib.sha256()
-    for name in sorted(_ops.VARIANTS):
-        spec = _ops.VARIANTS[name]
-        h.update(name.encode())
-        h.update(f"|{spec.algorithm}|{spec.engine}|{spec.jump_mode}|{spec.tunables}".encode())
-        try:
-            h.update(inspect.getsource(spec.fn).encode())
-        except (OSError, TypeError):
-            h.update(repr(spec.fn).encode())
+    registries = [("tree", _ops.VARIANTS), ("forest", _ops.FOREST_VARIANTS)]
+    for tag, registry in registries:
+        for name in sorted(registry):
+            spec = registry[name]
+            h.update(f"{tag}:{name}".encode())
+            h.update(
+                f"|{spec.algorithm}|{spec.engine}|{spec.jump_mode}|{spec.tunables}".encode()
+            )
+            h.update(f"|{getattr(spec, 'family', '')}".encode())
+            try:
+                h.update(inspect.getsource(spec.fn).encode())
+            except (OSError, TypeError):
+                h.update(repr(spec.fn).encode())
     # the registered fns are thin wrappers: hash the modules the variants
     # actually lower through (Pallas kernels + the jnp evaluators)
     for mod in (_ops, _kernel, _spec, _dp):
@@ -102,7 +108,9 @@ class TuneCache:
     """JSON-backed best-variant store with a bounded LRU front.
 
     The LRU only caches *hits*; misses always re-check the loaded table so a
-    concurrent tuner's writes show up after :meth:`reload`.
+    concurrent tuner's writes show up after :meth:`reload`.  In-process
+    state is guarded by a lock: the serve engines' background re-tune
+    stores winners from a worker thread while the request path looks up.
     """
 
     def __init__(
@@ -118,6 +126,10 @@ class TuneCache:
         self._registry = registry
         self._lru: OrderedDict[str, TuneEntry] = OrderedDict()
         self._table: dict[str, dict] = {}
+        self._lock = threading.Lock()      # in-memory state (lookup hot path)
+        self._io_lock = threading.Lock()   # file writes — never held with _lock
+        self._seq = 0                      # snapshot order, so a slow writer
+        self._written_seq = 0              # can't clobber a newer flush
         self.reload()
 
     @property
@@ -134,7 +146,7 @@ class TuneCache:
         names timings of code that no longer exists, so re-tuning is the
         only honest recovery.
         """
-        self._table = {}
+        table = {}
         try:
             raw = json.loads(self.path.read_text())
             if (
@@ -142,56 +154,74 @@ class TuneCache:
                 and raw.get("version") == CACHE_VERSION
                 and raw.get("registry") == self.registry
             ):
-                self._table = dict(raw.get("entries", {}))
+                table = dict(raw.get("entries", {}))
         except (OSError, ValueError):
             pass
-        self._lru.clear()
+        with self._lock:
+            self._table = table
+            self._lru.clear()
 
-    def _flush(self) -> None:
-        payload = {
-            "version": CACHE_VERSION,
-            "registry": self.registry,
-            "entries": self._table,
-        }
-        self.path.parent.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=self.path.parent, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=1, sort_keys=True)
-            os.replace(tmp, self.path)
-        except BaseException:
+    def _flush(self, payload: dict, seq: int) -> None:
+        """Write a table snapshot (atomic rename), skipping stale snapshots.
+
+        Runs *outside* ``_lock`` so lookups on the serving request path
+        never block on disk I/O; ``_io_lock`` + the sequence number keep a
+        slow writer from replacing a newer snapshot with an older one.
+        """
+        with self._io_lock:
+            if seq <= self._written_seq:
+                return
+            self._written_seq = seq
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.path.parent, suffix=".tmp")
             try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
 
     # -- access -------------------------------------------------------------
 
     def lookup(self, key: str) -> Optional[TuneEntry]:
-        hit = self._lru.get(key)
-        if hit is not None:
-            self._lru.move_to_end(key)
-            return hit
-        raw = self._table.get(key)
-        if raw is None:
-            return None
-        entry = TuneEntry.from_json(raw)
-        self._lru[key] = entry
-        if len(self._lru) > self.lru_size:
-            self._lru.popitem(last=False)
-        return entry
+        with self._lock:
+            hit = self._lru.get(key)
+            if hit is not None:
+                self._lru.move_to_end(key)
+                return hit
+            raw = self._table.get(key)
+            if raw is None:
+                return None
+            entry = TuneEntry.from_json(raw)
+            self._lru[key] = entry
+            if len(self._lru) > self.lru_size:
+                self._lru.popitem(last=False)
+            return entry
 
     def store(self, key: str, entry: TuneEntry) -> None:
-        self._table[key] = entry.to_json()
-        self._lru[key] = entry
-        self._lru.move_to_end(key)
-        if len(self._lru) > self.lru_size:
-            self._lru.popitem(last=False)
-        self._flush()
+        with self._lock:
+            self._table[key] = entry.to_json()
+            self._lru[key] = entry
+            self._lru.move_to_end(key)
+            if len(self._lru) > self.lru_size:
+                self._lru.popitem(last=False)
+            self._seq += 1
+            seq = self._seq
+            payload = {
+                "version": CACHE_VERSION,
+                "registry": self.registry,
+                "entries": dict(self._table),
+            }
+        self._flush(payload, seq)
 
     def __len__(self) -> int:
-        return len(self._table)
+        with self._lock:
+            return len(self._table)
 
     def keys(self) -> list[str]:
-        return sorted(self._table)
+        with self._lock:
+            return sorted(self._table)

@@ -13,19 +13,40 @@ variant and slices the padding back off, so every call inside a bucket hits
 one jit specialisation and the timings stored by the tuner stay honest.
 All variants are exact (bit-identical to the serial reference), so dispatch
 never changes results — only which kernel produces them.
+
+:class:`ForestTunedEvaluator` lifts the same contract to whole forests: the
+resolution unit is the (T, M, N_max, A, depth-profile) bucket and the
+candidate space spans three families (per-tree variant vectors, shared-
+variant vmap, fused stacked kernel).  Both evaluators expose ``promote`` /
+``invalidate`` — the atomic winner-swap hooks the serve engines' background
+re-tune drives.
 """
 
 from __future__ import annotations
+
+import threading
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.tree import EncodedTree, tree_depth
-from repro.kernels.tree_eval.ops import VARIANTS, get_variant
+from repro.kernels.tree_eval.ops import (
+    FOREST_VARIANTS,
+    PER_TREE_FAMILY,
+    VARIANTS,
+    PackedForest,
+    get_forest_variant,
+    get_variant,
+)
 from repro.tune.cache import TuneCache, TuneEntry
-from repro.tune.heuristic import heuristic_candidate, measured_d_mu
-from repro.tune.measure import bucket_pad_records, tune_workload
-from repro.tune.space import Candidate, WorkloadShape, backend_tag
+from repro.tune.heuristic import (
+    forest_heuristic_candidate,
+    heuristic_candidate,
+    measured_d_mu,
+    measured_forest_d_mu,
+)
+from repro.tune.measure import bucket_pad_records, tune_forest_workload, tune_workload
+from repro.tune.space import Candidate, ForestShape, WorkloadShape, backend_tag
 
 
 class TunedEvaluator:
@@ -64,6 +85,31 @@ class TunedEvaluator:
         # (M, A) → (spec, params, bucket_m): the steady-state call path does
         # one dict probe and zero array ops beyond the kernel itself.
         self._fast: dict[tuple[int, int], tuple] = {}
+        # guards promote()/invalidate() against the resolve path; the fast
+        # path itself stays lock-free (GIL-atomic dict probes).  _gen counts
+        # swaps so a runner built from a pre-swap resolution is never cached
+        # over a fresh promotion.
+        self._swap_lock = threading.Lock()
+        self._gen = 0
+
+    def promote(self, key: str, cand: Candidate) -> None:
+        """Atomically swap the winner for bucket ``key`` (background re-tune).
+
+        Callers observe either the old winner or the new one, never a torn
+        state: the memo entry and the fast-path table swap under one lock,
+        and every variant is exact, so results are identical either way.
+        """
+        with self._swap_lock:
+            self._gen += 1
+            self._resolved[key] = (cand, "retune")
+            self._fast.clear()
+
+    def invalidate(self) -> None:
+        """Drop all resolution memos so the next call re-reads the cache."""
+        with self._swap_lock:
+            self._gen += 1
+            self._resolved.clear()
+            self._fast.clear()
 
     def resolve(self, records) -> tuple[Candidate, str]:
         """Pick the candidate for this batch; returns (candidate, source)
@@ -96,20 +142,31 @@ class TunedEvaluator:
                 kw["d_mu"] = measured_d_mu(self.enc, records, sample=self.d_mu_sample)
             cand = heuristic_candidate(shape, engines=self.engines, **kw)
             source = "heuristic"
-        self._resolved[key] = (cand, source)
-        return cand, source
+        # setdefault under the lock: if a background promote() landed while
+        # we resolved, its winner must not be overwritten with ours (and the
+        # returned value is read inside the same critical section — a
+        # concurrent invalidate() may clear the dict right after)
+        with self._swap_lock:
+            resolved = self._resolved.setdefault(key, (cand, source))
+        return resolved[0], source
 
     def __call__(self, records) -> jax.Array:
+        """Evaluate the tree over ``records`` (M, A) → (M,) int32 classes,
+        through the bucket's resolved variant (bucket-padded, unpadded on
+        return); bit-identical to ``eval_serial`` for every resolution."""
         if not (isinstance(records, jax.Array) and records.dtype == jnp.float32):
             records = jnp.asarray(records, jnp.float32)
         m, a = records.shape
         fast = self._fast.get((m, a))
         if fast is None:
+            gen = self._gen
             cand, _ = self.resolve(records)
             spec = get_variant(cand.variant)
             bucket_m = WorkloadShape(m, self.enc.n_nodes, a, self.depth).bucket().m
             fast = (spec, cand.param_dict, bucket_m)
-            self._fast[(m, a)] = fast
+            with self._swap_lock:
+                if gen == self._gen:   # don't cache a pre-swap resolution
+                    self._fast[(m, a)] = fast
         spec, params, bucket_m = fast
         out = spec.fn(
             bucket_pad_records(records, bucket_m),
@@ -134,3 +191,234 @@ def tuned_eval(
     (M,) int32 class assignments, bit-identical to ``eval_serial``.
     """
     return TunedEvaluator(tree, cache=cache, autotune=autotune, engines=engines)(records)
+
+
+# ---------------------------------------------------------------------------
+# Forest-level dispatch
+# ---------------------------------------------------------------------------
+
+
+class ForestTunedEvaluator:
+    """Reusable tuned dispatcher for one encoded *forest*.
+
+    The forest analogue of :class:`TunedEvaluator`, and the single selection
+    point every forest call routes through (``eval_forest_tuned``, the
+    ``repro.dist`` executor, ``ForestServeEngine``).  Resolution order per
+    (backend, forest-bucket):
+
+      1. in-process memo,
+      2. persistent cache (forest bucket keys, see
+         :meth:`repro.tune.space.ForestShape.key`),
+      3. optional on-miss autotune (``autotune=True`` — measures all three
+         candidate families via :func:`repro.tune.measure.tune_forest_workload`),
+      4. the §3.6-model family heuristic
+         (:func:`repro.tune.heuristic.forest_heuristic_candidate`).
+
+    The winning candidate is one of three families: ``per_tree`` dispatches
+    each tree through its own :class:`TunedEvaluator` (the PR 3 path — a
+    per-tree variant *vector*); ``vmap`` runs one shared variant stacked
+    over the tree axis; ``fused`` launches the stacked Pallas kernel once
+    for the whole forest.  All families are exact, so the choice never
+    changes results — bit-identical to evaluating tree by tree.
+    """
+
+    def __init__(
+        self,
+        forest,
+        *,
+        cache: TuneCache | None = None,
+        autotune: bool = False,
+        engines: tuple[str, ...] | None = None,
+        families: tuple[str, ...] | None = None,
+        measure_kw: dict | None = None,
+        measure_d_mu: bool = True,
+        d_mu_sample: int = 256,
+        heuristic_kw: dict | None = None,
+    ):
+        from repro.core.forest import EncodedForest  # local: core ↔ tune layering
+
+        self.forest = forest if isinstance(forest, EncodedForest) else EncodedForest(list(forest))
+        self.cache = cache if cache is not None else TuneCache()
+        self.autotune = autotune
+        self.engines = engines
+        self.families = families
+        self.measure_kw = dict(measure_kw or {})
+        self.measure_d_mu = measure_d_mu
+        self.d_mu_sample = d_mu_sample
+        self.heuristic_kw = dict(heuristic_kw or {})
+        from repro.core.tree import tree_depth as _td
+
+        depths = [max(_td(self.forest.tree(i)), 1) for i in range(self.forest.n_trees)]
+        self.depth_min = min(depths)
+        self.depth_max = max(depths)
+        self._resolved: dict[str, tuple[Candidate, str]] = {}
+        self._fast: dict[tuple[int, int], object] = {}   # (M, A) → runner
+        self._per_tree: list[TunedEvaluator] | None = None
+        self._packed: PackedForest | None = None
+        self._swap_lock = threading.Lock()
+        self._gen = 0
+
+    # -- re-tune hooks ------------------------------------------------------
+
+    def promote(self, key: str, cand: Candidate) -> None:
+        """Atomically swap the winner for forest bucket ``key``.
+
+        See :meth:`TunedEvaluator.promote` — same contract: in-flight calls
+        finish on the old winner, subsequent calls run the new one, results
+        are bit-identical throughout.
+        """
+        with self._swap_lock:
+            self._gen += 1
+            self._resolved[key] = (cand, "retune")
+            self._fast.clear()
+
+    def invalidate(self) -> None:
+        """Drop all resolution memos so the next call re-reads the cache."""
+        with self._swap_lock:
+            self._gen += 1
+            self._resolved.clear()
+            self._fast.clear()
+
+    def _family_allowed(self, variant: str) -> bool:
+        """Whether a cached winner's family is within this evaluator's
+        ``families`` restriction (a family-restricted evaluator must never
+        run another family just because a sibling cached it)."""
+        if self.families is None:
+            return True
+        if variant == PER_TREE_FAMILY:
+            return PER_TREE_FAMILY in self.families
+        return FOREST_VARIANTS[variant].family in self.families
+
+    # -- resolution ---------------------------------------------------------
+
+    def shape_of(self, records) -> ForestShape:
+        """The :class:`ForestShape` of this batch (depths precomputed)."""
+        return ForestShape.of(
+            records, self.forest, depth_min=self.depth_min, depth_max=self.depth_max
+        )
+
+    def resolve(self, records) -> tuple[Candidate, str]:
+        """Pick the forest candidate for this batch.
+
+        Returns:
+          (candidate, source) with source ∈ {"memo", "cache", "autotune",
+          "heuristic"}; after a background re-tune the memo carries the
+          promoted winner.
+        """
+        shape = self.shape_of(records)
+        backend = backend_tag()
+        key = shape.key(backend)
+        hit = self._resolved.get(key)
+        if hit is not None:
+            return hit[0], "memo"
+
+        entry = self.cache.lookup(key)
+        source = "cache"
+        if (
+            entry is not None
+            and (entry.variant in FOREST_VARIANTS or entry.variant == PER_TREE_FAMILY)
+            and self._family_allowed(entry.variant)
+        ):
+            cand = Candidate.make(entry.variant, **entry.params)
+        elif self.autotune:
+            entry, _ = tune_forest_workload(
+                records,
+                self.forest,
+                cache=self.cache,
+                engines=self.engines,
+                families=self.families,
+                backend=backend,
+                autotune_trees=True,   # per-tree family priced at its tuned best
+                store=self.families is None,  # a restricted winner must not
+                                              # overwrite the bucket's one
+                **self.measure_kw,
+            )
+            cand = Candidate.make(entry.variant, **entry.params)
+            source = "autotune"
+        else:
+            kw = dict(self.heuristic_kw)
+            if self.measure_d_mu and "d_mu" not in kw:
+                kw["d_mu"] = measured_forest_d_mu(
+                    self.forest, records, sample=self.d_mu_sample
+                )
+            cand = forest_heuristic_candidate(
+                shape, engines=self.engines, families=self.families, **kw
+            )
+            source = "heuristic"
+        # same critical-section discipline as TunedEvaluator.resolve: don't
+        # clobber a concurrent promote(), don't re-read after unlocking
+        with self._swap_lock:
+            resolved = self._resolved.setdefault(key, (cand, source))
+        return resolved[0], source
+
+    # -- evaluation ---------------------------------------------------------
+
+    def _tree_evaluators(self) -> list[TunedEvaluator]:
+        if self._per_tree is None:
+            self._per_tree = [
+                TunedEvaluator(
+                    self.forest.tree(i), cache=self.cache, engines=self.engines,
+                    autotune=self.autotune, measure_kw=self.measure_kw,
+                )
+                for i in range(self.forest.n_trees)
+            ]
+        return self._per_tree
+
+    def _runner(self, cand: Candidate, m: int, a: int):
+        """Build the steady-state callable for one resolved candidate."""
+        if cand.variant == PER_TREE_FAMILY:
+            evs = self._tree_evaluators()
+            return lambda rec: jnp.stack([ev(rec) for ev in evs])
+        spec = get_forest_variant(cand.variant)
+        params = cand.param_dict
+        depth = max(int(self.forest.max_depth), 1)
+        bucket_m = ForestShape(
+            t=self.forest.n_trees, m=m, n_nodes=self.forest.n_nodes,
+            n_attrs=a, depth_min=self.depth_min, depth_max=self.depth_max,
+        ).bucket().m
+        if spec.family == "fused":
+            if self._packed is None or self._packed.n_attrs != a:
+                self._packed = PackedForest(self.forest, a)
+            target = self._packed
+        else:
+            target = self.forest
+
+        def run(rec):
+            out = spec.fn(bucket_pad_records(rec, bucket_m), target, max_depth=depth, **params)
+            return out if out.shape[1] == m else out[:, :m]
+
+        return run
+
+    def __call__(self, records) -> jax.Array:
+        """Per-tree class assignments, shape (T, M) int32."""
+        if not (isinstance(records, jax.Array) and records.dtype == jnp.float32):
+            records = jnp.asarray(records, jnp.float32)
+        m, a = records.shape
+        run = self._fast.get((m, a))
+        if run is None:
+            gen = self._gen
+            cand, _ = self.resolve(records)
+            run = self._runner(cand, m, a)
+            with self._swap_lock:
+                if gen == self._gen:   # don't cache a pre-swap resolution
+                    self._fast[(m, a)] = run
+        return run(records)
+
+
+def tuned_eval_forest(
+    records,
+    forest,
+    *,
+    cache: TuneCache | None = None,
+    autotune: bool = False,
+    engines: tuple[str, ...] | None = None,
+) -> jax.Array:
+    """Evaluate ``forest`` over ``records`` with the cached-best family.
+
+    One-shot convenience wrapper around :class:`ForestTunedEvaluator`;
+    returns the (T, M) int32 per-tree class assignments, bit-identical to
+    evaluating each tree with ``eval_serial``.
+    """
+    return ForestTunedEvaluator(
+        forest, cache=cache, autotune=autotune, engines=engines
+    )(records)

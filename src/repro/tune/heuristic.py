@@ -18,12 +18,28 @@ pick engine/jump-mode (Pallas + one-hot MXU on TPU, XLA gather elsewhere).
 from __future__ import annotations
 
 from repro.core.analysis import CostModel, t3_data_parallel, t5_speculative
-from repro.kernels.tree_eval.ops import choose_block_m, on_tpu
-from repro.tune.space import MAX_ONEHOT_NODES, Candidate, WorkloadShape, default_engines
+from repro.kernels.tree_eval.ops import PER_TREE_FAMILY, choose_block_m, on_tpu
+from repro.tune.space import (
+    MAX_ONEHOT_NODES,
+    Candidate,
+    ForestShape,
+    WorkloadShape,
+    default_engines,
+)
+
+# Per-launch dispatch overhead in §3.6 node-evaluation units (the planner's
+# γ_launch prior): what the per-tree family pays T times and the stacked
+# families pay once.  Only the *ratio* against the compute terms matters —
+# the heuristic ranks families, it does not predict milliseconds.
+FOREST_LAUNCH_OVERHEAD = 50.0
 
 
 def default_p_group(shape: WorkloadShape) -> int:
-    """Processors per record group: the internal nodes of a full binary tree."""
+    """Processors per record group: the internal nodes of a full binary tree.
+
+    The paper's p — each record group assigns one processor per internal
+    node during speculative node evaluation ((N-1)/2 for a full tree).
+    """
     return max(1, (shape.n_nodes - 1) // 2)
 
 
@@ -69,7 +85,19 @@ def predicted_times(
     p_group: float | None = None,
     p_total: float = 1.0,
 ) -> dict[str, float]:
-    """§3.6 model runtimes per algorithm for this shape."""
+    """§3.6 model runtimes per algorithm for this shape.
+
+    Args:
+      shape: the (M, N, A, depth) operating point.
+      cm: §3.6 machine constants (t_e, t_c, t_i, σ, γ).
+      d_mu: mean traversal depth; default = the geometry prior.
+      p_group: processors per record group; default = internal-node count.
+      p_total: total processors P the work divides over.
+
+    Returns:
+      {"data_parallel": T₃, "speculative": T₅} in model units — rank-valid
+      per shape, not milliseconds.
+    """
     d = d_mu if d_mu is not None else default_d_mu(shape)
     d = max(float(d), 1.0)
     p = p_group if p_group is not None else default_p_group(shape)
@@ -108,3 +136,125 @@ def heuristic_candidate(
         return Candidate.make("jnp_data_parallel")
     # paper: 2 jumps per synchronisation round was the measured optimum
     return Candidate.make("jnp_speculative_gather", jumps_per_round=2)
+
+
+# ---------------------------------------------------------------------------
+# Forest-level heuristic: per-tree vector vs stacked (vmap / fused)
+# ---------------------------------------------------------------------------
+
+
+def measured_forest_d_mu(forest, records, *, trees: int = 4, sample: int = 256) -> float:
+    """Forest d_µ: measured mean over a few trees × a record sample.
+
+    Args:
+      forest: an :class:`repro.core.forest.EncodedForest`.
+      records: (M, A) record batch (host or device array).
+      trees: how many trees to walk (the first ``min(T, trees)``).
+      sample: records per tree (:func:`measured_d_mu`'s sample bound).
+
+    Returns:
+      Mean traversal depth ≥ 1.0 — the d_µ the §3.6 forms are evaluated at.
+    """
+    import numpy as np
+
+    rec = np.asarray(records)[:sample]
+    picked = range(min(int(forest.n_trees), max(trees, 1)))
+    return float(np.mean([measured_d_mu(forest.tree(i), rec, sample=sample) for i in picked]))
+
+
+def forest_heuristic_candidate(
+    shape: ForestShape,
+    *,
+    cm: CostModel = CostModel(),
+    d_mu: float | None = None,
+    p_group: float | None = None,
+    engines: tuple[str, ...] | None = None,
+    families: tuple[str, ...] | None = None,
+    launch_overhead: float = FOREST_LAUNCH_OVERHEAD,
+) -> Candidate:
+    """Model-based forest family + variant choice (the no-cache fallback).
+
+    The stacked families evaluate every tree at the *padded* common geometry
+    — each tree pays the deepest tree's rounds — but launch once; the
+    per-tree family pays each tree's own depth but launches T times.  With
+    t(d) = the §3.6 winner's time at depth-profile point d:
+
+        stacked  ≈ T · t(depth_max)                + γ
+        per-tree ≈ T · (t(depth_min)+t(depth_max))/2 + T·γ
+
+    (the midpoint is the depth-profile prior for the mean per-tree cost).
+    A homogeneous profile therefore always picks a stacked family; a spread
+    profile flips to per-tree once the padding waste outgrows the saved
+    launches.  Within a stacked family, engine rules mirror
+    :func:`heuristic_candidate`: fused Pallas on TPU, the vmap jnp path off
+    it.
+
+    Args:
+      shape: the forest operating point (T, M, N_max, A, depth profile).
+      cm / d_mu / p_group: §3.6 model inputs, as in :func:`predicted_times`.
+      engines: permitted engines; default = :func:`default_engines`.
+      families: permitted families; default = all three.
+      launch_overhead: γ in node-evaluation units.
+
+    Returns:
+      A :class:`Candidate` — ``Candidate(PER_TREE_FAMILY)`` or a registered
+      forest variant with its parameters filled in.
+    """
+    engines = default_engines() if engines is None else tuple(engines)
+    families = ("per_tree", "vmap", "fused") if families is None else tuple(families)
+
+    deep = WorkloadShape(m=shape.m, n_nodes=shape.n_nodes,
+                         n_attrs=shape.n_attrs, depth=shape.depth_max)
+    shallow = WorkloadShape(m=shape.m, n_nodes=shape.n_nodes,
+                            n_attrs=shape.n_attrs, depth=shape.depth_min)
+
+    def best_time(s: WorkloadShape, d: float | None) -> float:
+        return min(predicted_times(s, cm=cm, d_mu=d, p_group=p_group).values())
+
+    # d_µ scales with the profile point: a measured/maximum-depth d_µ maps
+    # onto the shallow end proportionally (the prior does this implicitly).
+    d_deep = d_mu
+    d_shallow = None if d_mu is None else max(1.0, d_mu * shape.depth_min / max(shape.depth_max, 1))
+    t_deep = best_time(deep, d_deep)
+    t_shallow = best_time(shallow, d_shallow)
+
+    stacked_cost = shape.t * t_deep + launch_overhead
+    per_tree_cost = shape.t * (t_deep + t_shallow) / 2.0 + shape.t * launch_overhead
+
+    # a stacked family is usable only when its engine is permitted: fused is
+    # the Pallas path, vmap the jnp one (forest_search_space filters the
+    # same way, so the heuristic never names a candidate the space excludes)
+    stacked_ok = [
+        f for f in ("fused", "vmap")
+        if f in families and (("pallas" in engines) if f == "fused" else ("jnp" in engines))
+    ]
+    if not stacked_ok and PER_TREE_FAMILY not in families:
+        # the caller forced stacked families whose engines they excluded:
+        # honour the family request over the engine filter, native engine
+        stacked_ok = [f for f in ("fused", "vmap") if f in families]
+    want_stacked = bool(stacked_ok) and (
+        PER_TREE_FAMILY not in families or stacked_cost <= per_tree_cost
+    )
+    if not want_stacked:
+        return Candidate.make(PER_TREE_FAMILY)
+
+    family = stacked_ok[0]
+    engine = "pallas" if family == "fused" else "jnp"
+
+    times = predicted_times(deep, cm=cm, d_mu=d_deep, p_group=p_group)
+    algorithm = min(times, key=times.get)
+    onehot_ok = shape.n_nodes <= MAX_ONEHOT_NODES
+    if algorithm == "data_parallel":
+        name, jump_mode = f"forest_{family}_data_parallel", "gather"
+    else:
+        jump_mode = "onehot" if (engine == "pallas" and on_tpu() and onehot_ok) else "gather"
+        name = f"forest_{family}_speculative_{jump_mode}"
+
+    if family == "fused":
+        b = shape.bucket()
+        bm = choose_block_m(b.n_nodes, b.n_attrs, jump_mode=jump_mode)
+        return Candidate.make(name, block_m=bm)
+    if algorithm == "speculative":
+        # paper: 2 jumps per synchronisation round was the measured optimum
+        return Candidate.make(name, jumps_per_round=2)
+    return Candidate.make(name)

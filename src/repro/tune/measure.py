@@ -15,9 +15,21 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.tree_eval.ops import get_variant
+from repro.kernels.tree_eval.ops import (
+    PER_TREE_FAMILY,
+    PackedForest,
+    get_forest_variant,
+    get_variant,
+)
 from repro.tune.cache import TuneCache, TuneEntry
-from repro.tune.space import Candidate, WorkloadShape, backend_tag, search_space
+from repro.tune.space import (
+    Candidate,
+    ForestShape,
+    WorkloadShape,
+    backend_tag,
+    forest_search_space,
+    search_space,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,7 +51,18 @@ def _median(xs) -> float:
 
 
 def time_callable(fn, *, warmup: int = 2, iters: int = 5) -> tuple[float, ...]:
-    """Millisecond samples of ``fn()``; each run synchronised on its output."""
+    """Millisecond samples of ``fn()``; each run synchronised on its output.
+
+    Args:
+      fn: zero-argument callable returning a jax array/pytree; called
+        ``warmup`` times un-timed (compilation, cache warm) then ``iters``
+        times with ``jax.block_until_ready`` bracketing each run.
+      warmup/iters: the measurement discipline (see module docstring).
+
+    Returns:
+      ``iters`` wall-clock samples in milliseconds (device-completion
+      times, not dispatch times).
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn())
     samples = []
@@ -61,6 +84,14 @@ def interleaved_samples(
     each iteration cancels the warm-cache advantage of running later in a
     round.  Sample i of each key comes from the same round, so per-round
     ratios (``a[i]/b[i]``) are drift-free paired statistics.
+
+    Args:
+      fns: {label: zero-argument callable} — every contender to time.
+      warmup/iters: per-callable warmup runs and timed rounds.
+
+    Returns:
+      {label: [ms, ...]} with ``iters`` samples per label, index-aligned
+      across labels (sample i of every label came from round i).
     """
     for fn in fns.values():
         for _ in range(warmup):
@@ -82,9 +113,19 @@ def interleaved_medians(fns: dict[str, object], *, warmup: int = 2, iters: int =
 
 
 def bucket_pad_records(records: jax.Array, bucket_m: int) -> jax.Array:
-    """Zero-pad the record batch up to the bucket's M (rows past the real M
-    cost the same as real rows, which is exactly what the bucket entry must
-    price in)."""
+    """Zero-pad the record batch up to the bucket's M.
+
+    Rows past the real M cost the same as real rows, which is exactly what
+    the bucket entry must price in.
+
+    Args:
+      records: (M, A) float array with M ≤ ``bucket_m``.
+      bucket_m: the shape bucket's record count (a power of two).
+
+    Returns:
+      (bucket_m, A) array — ``records`` above zero rows; returned as-is
+      when M already equals ``bucket_m``.
+    """
     m = records.shape[0]
     if m == bucket_m:
         return records
@@ -100,7 +141,20 @@ def measure_candidate(
     warmup: int = 2,
     iters: int = 5,
 ) -> Measurement:
-    """Median wall time of one candidate; a raising candidate measures as ∞."""
+    """Median wall time of one candidate; a raising candidate measures as ∞.
+
+    Args:
+      candidate: the (variant, params) pair to time.
+      records: (M, A) float32 batch, already bucket-padded by the caller.
+      enc: the :class:`repro.core.tree.EncodedTree` under test.
+      max_depth: static depth bound passed to the variant.
+      warmup/iters: :func:`time_callable` discipline.
+
+    Returns:
+      A :class:`Measurement`; ``failed`` (empty samples, median ∞) when
+      the candidate raised — invalid candidates lose, they don't crash the
+      sweep.
+    """
     spec = get_variant(candidate.variant)
     params = candidate.param_dict
 
@@ -159,5 +213,144 @@ def tune_workload(
         backend=backend,
     )
     if cache is not None:
+        cache.store(shape.key(backend), entry)
+    return entry, measurements
+
+
+# ---------------------------------------------------------------------------
+# Forest-level measurement
+# ---------------------------------------------------------------------------
+
+
+def _forest_candidate_fn(
+    candidate: Candidate, rec, forest, *, depth: int, cache, engines,
+    autotune_trees: bool = False, measure_kw: dict | None = None,
+):
+    """Build the timed callable for one forest candidate (warm state outside
+    the timed region: per-tree winners resolved — autotuned when
+    ``autotune_trees``, pricing the per-tree family at its tuned best —
+    and fused tables packed)."""
+    if candidate.variant == PER_TREE_FAMILY:
+        from repro.tune.dispatch import TunedEvaluator  # local: avoid cycle
+
+        evs = [
+            TunedEvaluator(forest.tree(i), cache=cache, engines=engines,
+                           autotune=autotune_trees, measure_kw=measure_kw)
+            for i in range(forest.n_trees)
+        ]
+        return lambda: jnp.stack([ev(rec) for ev in evs])
+    spec = get_forest_variant(candidate.variant)
+    params = candidate.param_dict
+    target = PackedForest(forest, rec.shape[1]) if spec.family == "fused" else forest
+    return lambda: spec.fn(rec, target, max_depth=depth, **params)
+
+
+def measure_forest_candidate(
+    candidate: Candidate,
+    records,
+    forest,
+    *,
+    cache: TuneCache | None = None,
+    engines: tuple[str, ...] | None = None,
+    warmup: int = 2,
+    iters: int = 5,
+    autotune_trees: bool = False,
+) -> Measurement:
+    """Median wall time of one forest candidate; a raising candidate is ∞.
+
+    Args:
+      candidate: a :func:`repro.tune.space.forest_search_space` candidate
+        (``Candidate(PER_TREE_FAMILY)`` or a registered forest variant).
+      records: (M, A) float32 batch, already bucket-padded by the caller.
+      forest: the :class:`repro.core.forest.EncodedForest` under test.
+      cache/engines: per-tree resolution inputs for the ``per_tree`` family.
+      warmup/iters: :func:`time_callable` discipline.
+      autotune_trees: measure the ``per_tree`` family with per-tree
+        autotuning (winners measured during warmup, persisted to ``cache``)
+        instead of the heuristic — the PR 3 tuned baseline.
+
+    Returns:
+      A :class:`Measurement` whose samples bracket device completion.
+    """
+    depth = max(int(forest.max_depth), 1)
+    try:
+        run = _forest_candidate_fn(
+            candidate, records, forest, depth=depth, cache=cache, engines=engines,
+            autotune_trees=autotune_trees,
+            measure_kw={"warmup": warmup, "iters": iters},
+        )
+        samples = time_callable(run, warmup=warmup, iters=iters)
+    except Exception:
+        return Measurement(candidate, float("inf"), ())
+    return Measurement(candidate, _median(samples), samples)
+
+
+def tune_forest_workload(
+    records,
+    forest,
+    *,
+    cache: TuneCache | None = None,
+    engines: tuple[str, ...] | None = None,
+    families: tuple[str, ...] | None = None,
+    warmup: int = 2,
+    iters: int = 5,
+    backend: str | None = None,
+    verbose: bool = False,
+    autotune_trees: bool = False,
+    store: bool = True,
+) -> tuple[TuneEntry, list[Measurement]]:
+    """Time every valid forest candidate and record the winning family.
+
+    The forest analogue of :func:`tune_workload`: records are zero-padded to
+    the :class:`ForestShape` bucket's M before timing (pricing what dispatch
+    will actually run) and every candidate from the three families —
+    per-tree variant vector, shared-variant vmap, fused stacked kernel — is
+    measured with the same warmup/median discipline.  The winner is stored
+    in ``cache`` under the forest bucket key.
+
+    Args:
+      records: (M, A) record batch.
+      forest: the :class:`repro.core.forest.EncodedForest` to tune for.
+      cache: winner store (also consulted by the ``per_tree`` family's
+        per-tree resolutions).
+      engines/families: restrict the candidate enumeration.
+      warmup/iters/backend/verbose: as in :func:`tune_workload`.
+      autotune_trees: give the ``per_tree`` family its tuned best (per-tree
+        winners measured and persisted) rather than the heuristic choice.
+      store: persist the winner under the forest bucket key.  Callers
+        measuring a *restricted* family set pass False — a family-filtered
+        winner must not overwrite the bucket's unrestricted one.
+
+    Returns:
+      (winning entry, all measurements) — entry.variant is a forest variant
+      name or ``"per_tree"``.
+    """
+    backend = backend or backend_tag()
+    rec = jnp.asarray(records, jnp.float32)
+    shape = ForestShape.of(rec, forest)
+    rec = bucket_pad_records(rec, shape.bucket().m)
+
+    measurements = [
+        measure_forest_candidate(
+            c, rec, forest, cache=cache, engines=engines, warmup=warmup, iters=iters,
+            autotune_trees=autotune_trees,
+        )
+        for c in forest_search_space(shape, engines=engines, families=families)
+    ]
+    ok = [m for m in measurements if not m.failed]
+    if not ok:
+        raise RuntimeError(f"no forest candidate succeeded for shape {shape}")
+    best = min(ok, key=lambda m: m.median_ms)
+    if verbose:
+        for m in sorted(ok, key=lambda m: m.median_ms):
+            print(f"  {m.median_ms:10.3f} ms  {m.candidate.variant} {m.candidate.param_dict}")
+    entry = TuneEntry(
+        variant=best.candidate.variant,
+        params=best.candidate.param_dict,
+        median_ms=best.median_ms,
+        shape=dataclasses.asdict(shape),
+        backend=backend,
+    )
+    if cache is not None and store:
         cache.store(shape.key(backend), entry)
     return entry, measurements

@@ -13,6 +13,12 @@ two, N and A round up to the 128-lane tile the kernels pad to anyway, and
 depth rounds up to the next power of two.  Bucketing trades a little
 optimality near bucket edges for cache hits across the jitter of real
 request sizes — the same reason the serve engine pads waves.
+
+Forest-level tuning adds :class:`ForestShape` — the (T, M, N_max, A,
+depth-profile) operating point of a whole forest call — and
+:func:`forest_search_space`, which enumerates the three candidate families
+(per-tree variant vectors, the shared-variant vmap path, and the fused
+stacked Pallas kernel) that :class:`repro.tune.ForestTunedEvaluator` ranks.
 """
 
 from __future__ import annotations
@@ -25,10 +31,13 @@ import jax
 
 from repro.kernels.tree_eval.ops import (
     LANE,
+    PER_TREE_FAMILY,
     SUBLANE,
+    ForestVariantSpec,
     VariantSpec,
     _round_up,
     choose_block_m,
+    list_forest_variants,
     list_variants,
     on_tpu,
 )
@@ -146,6 +155,7 @@ def default_engines() -> tuple[str, ...]:
 
 
 def variant_valid(spec: VariantSpec, shape: WorkloadShape) -> bool:
+    """Whether ``spec`` is worth timing at ``shape`` (see MAX_ONEHOT_NODES)."""
     if spec.jump_mode == "onehot" and shape.n_nodes > MAX_ONEHOT_NODES:
         return False
     return True
@@ -156,7 +166,18 @@ def search_space(
     *,
     engines: tuple[str, ...] | None = None,
 ) -> Iterator[Candidate]:
-    """Enumerate every candidate valid for ``shape``, cheapest-grid first."""
+    """Enumerate every candidate valid for ``shape``, cheapest-grid first.
+
+    Args:
+      shape: the (M, N, A, depth) operating point to tune for.
+      engines: permitted engines ("pallas"/"jnp"); default =
+        :func:`default_engines` for this backend.
+
+    Yields:
+      :class:`Candidate` values — each registered variant crossed with its
+      tunable-parameter grid (block_m from the VMEM model ± a power of
+      two, jumps_per_round from the Procedure-5 grid).
+    """
     engines = default_engines() if engines is None else tuple(engines)
     for spec in list_variants():
         if spec.engine not in engines or not variant_valid(spec, shape):
@@ -166,6 +187,139 @@ def search_space(
                 yield Candidate.make(spec.name, block_m=bm)
         elif "jumps_per_round" in spec.tunables:
             for j in _jumps_grid(shape):
+                yield Candidate.make(spec.name, jumps_per_round=j)
+        else:
+            yield Candidate.make(spec.name)
+
+
+# ---------------------------------------------------------------------------
+# Forest-level shapes and candidates
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ForestShape:
+    """The (T, M, N_max, A, depth profile) operating point of one forest call.
+
+    The depth *profile* — (depth_min, depth_max) over the forest's trees —
+    is what distinguishes forest buckets from a per-tree
+    :class:`WorkloadShape`: a homogeneous profile favours the stacked
+    families (padding every tree to the common geometry is free), a spread
+    profile charges the stacked families ``depth_max`` rounds for trees that
+    would finish in ``depth_min``.
+    """
+
+    t: int          # trees
+    m: int          # records
+    n_nodes: int    # common (padded) node count per tree — N_max
+    n_attrs: int    # record attributes
+    depth_min: int  # shallowest tree's max root→leaf depth (edges)
+    depth_max: int  # deepest tree's max root→leaf depth (edges)
+
+    def bucket(self) -> "ForestShape":
+        """Quantise to the cache-key granularity (idempotent)."""
+        return ForestShape(
+            t=_next_pow2(self.t),
+            m=_next_pow2(self.m),
+            n_nodes=_round_up(max(self.n_nodes, 1), LANE),
+            n_attrs=_round_up(max(self.n_attrs, 1), LANE),
+            depth_min=_next_pow2(self.depth_min),
+            depth_max=_next_pow2(self.depth_max),
+        )
+
+    def key(self, backend: str | None = None) -> str:
+        """Stable cache key for the forest bucket.
+
+        The ``T``/depth-profile components keep forest keys disjoint from
+        the per-tree ``WorkloadShape`` keys in the same cache file.
+        """
+        b = self.bucket()
+        tag = backend if backend is not None else backend_tag()
+        return f"{tag}|T{b.t}|M{b.m}|N{b.n_nodes}|A{b.n_attrs}|d{b.depth_min}-{b.depth_max}"
+
+    def tree_shape(self) -> WorkloadShape:
+        """The padded common geometry as a per-tree shape (heuristic input)."""
+        return WorkloadShape(
+            m=self.m, n_nodes=self.n_nodes, n_attrs=self.n_attrs, depth=self.depth_max
+        )
+
+    @classmethod
+    def of(
+        cls,
+        records,
+        forest,
+        *,
+        depth_min: int | None = None,
+        depth_max: int | None = None,
+    ) -> "ForestShape":
+        """Derive the shape from a record batch + EncodedForest.
+
+        Per-tree depths cost an O(T·N) host pass; callers that hold a
+        resolved evaluator (which computes them once) pass them in.
+        """
+        import numpy as np
+
+        from repro.core.tree import tree_depth
+
+        shape = np.asarray(records).shape if not hasattr(records, "shape") else records.shape
+        if depth_min is None or depth_max is None:
+            depths = [max(tree_depth(forest.tree(i)), 1) for i in range(forest.n_trees)]
+            depth_min = min(depths) if depth_min is None else depth_min
+            depth_max = max(depths) if depth_max is None else depth_max
+        return cls(
+            t=int(forest.n_trees),
+            m=int(shape[0]),
+            n_nodes=int(forest.n_nodes),
+            n_attrs=int(shape[1]),
+            depth_min=int(depth_min),
+            depth_max=int(depth_max),
+        )
+
+
+def forest_variant_valid(spec: ForestVariantSpec, shape: ForestShape) -> bool:
+    if spec.jump_mode == "onehot" and shape.n_nodes > MAX_ONEHOT_NODES:
+        return False
+    return True
+
+
+def forest_search_space(
+    shape: ForestShape,
+    *,
+    engines: tuple[str, ...] | None = None,
+    families: tuple[str, ...] | None = None,
+) -> Iterator[Candidate]:
+    """Enumerate every forest candidate valid for ``shape``.
+
+    Three families compete (issue/ROADMAP: forest-level tuning):
+
+      * ``per_tree`` — the PR 3 path: each tree dispatches through its own
+        per-tree winner (a variant *vector*, represented by the sentinel
+        candidate ``Candidate(PER_TREE_FAMILY)``);
+      * ``vmap``     — one shared variant, the stacked jnp formulation
+        ``vmap``-ed over the tree axis;
+      * ``fused``    — the stacked Pallas kernel: one launch, tree axis on
+        the grid.
+
+    ``families`` restricts the enumeration (the dist executor asks only for
+    the shared families — a shard body needs a single kern).
+    """
+    engines = default_engines() if engines is None else tuple(engines)
+    families = ("per_tree", "vmap", "fused") if families is None else tuple(families)
+    if PER_TREE_FAMILY in families:
+        yield Candidate.make(PER_TREE_FAMILY)
+    for spec in list_forest_variants():
+        if (
+            spec.family not in families
+            or spec.engine not in engines
+            or not forest_variant_valid(spec, shape)
+        ):
+            continue
+        tshape = shape.tree_shape()
+        if "block_m" in spec.tunables:
+            for bm in _block_m_grid(tshape, spec.jump_mode):
+                yield Candidate.make(spec.name, block_m=bm)
+        elif "jumps_per_round" in spec.tunables:
+            for j in _jumps_grid(tshape):
                 yield Candidate.make(spec.name, jumps_per_round=j)
         else:
             yield Candidate.make(spec.name)

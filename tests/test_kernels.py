@@ -14,7 +14,14 @@ import jax.numpy as jnp
 from hypothesis_compat import given, settings, st
 
 from repro.core import breadth_first_encode, paper_tree, random_tree, tree_depth
-from repro.kernels.tree_eval import PackedTree, forest_eval, tree_eval, tree_eval_ref
+from repro.kernels.tree_eval import (
+    PackedForest,
+    PackedTree,
+    forest_eval,
+    forest_eval_fused,
+    tree_eval,
+    tree_eval_ref,
+)
 from repro.kernels.tree_eval.ops import choose_block_m
 
 
@@ -105,6 +112,46 @@ def test_forest_eval_kernel():
     assert out.shape == (3, 128)
     for i, t in enumerate(trees):
         assert np.array_equal(out[i], _ref(t, rec))
+
+
+@pytest.mark.parametrize("algorithm,jump_mode", [
+    ("speculative", "gather"),
+    ("speculative", "onehot"),
+    ("data_parallel", "gather"),
+])
+@pytest.mark.parametrize("m", [1, 7, 100])
+def test_fused_forest_kernel_matches_ref(algorithm, jump_mode, m):
+    """The fused stacked-forest launch is bit-identical to tree-by-tree
+    evaluation for every algorithm × jump mode × ragged record count."""
+    from repro.core.forest import EncodedForest
+
+    trees = [_enc(depth=d, seed=10 + d) for d in (2, 5, 7)]
+    forest = EncodedForest(trees)
+    rec = np.random.default_rng(m).normal(size=(m, 19)).astype(np.float32)
+    out = np.asarray(
+        forest_eval_fused(rec, forest, algorithm=algorithm, jump_mode=jump_mode)
+    )
+    assert out.shape == (3, m)
+    assert out.dtype == np.int32
+    for i in range(3):
+        assert np.array_equal(out[i], _ref(forest.tree(i), rec))
+
+
+def test_fused_forest_packed_reuse_and_block_m():
+    """A prebuilt PackedForest (the dispatch fast path) and explicit block_m
+    overrides produce the same bits as the one-shot call."""
+    from repro.core.forest import EncodedForest
+
+    trees = [_enc(depth=d, seed=20 + d) for d in (3, 6)]
+    forest = EncodedForest(trees)
+    rec = np.random.default_rng(9).normal(size=(130, 19)).astype(np.float32)
+    ref = np.asarray(forest_eval_fused(rec, forest))
+    packed = PackedForest(forest, 19)
+    assert np.array_equal(np.asarray(forest_eval_fused(rec, packed)), ref)
+    for bm in (8, 32):
+        assert np.array_equal(
+            np.asarray(forest_eval_fused(rec, packed, block_m=bm)), ref
+        )
 
 
 def test_block_m_vmem_model():

@@ -1,0 +1,270 @@
+"""Serve-path background re-tune: hot-bucket promotion, atomic winner swap,
+and the load-bearing property — a re-tune can NEVER change results, even
+while evaluations run concurrently with the measurement and the swap
+(every candidate is exact, so promotion only moves latency).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+
+from repro.core import breadth_first_encode, paper_tree, random_tree, eval_serial
+from repro.core.forest import EncodedForest
+from repro.kernels.tree_eval import FOREST_VARIANTS, PER_TREE_FAMILY
+from repro.serve import BackgroundRetuner, ForestServeEngine, RetunePolicy, TreeRequest, TreeServeEngine
+from repro.tune import Candidate, TuneCache, TunedEvaluator, WorkloadShape
+
+
+def _records(m, a, seed=0):
+    return np.random.default_rng(seed).normal(size=(m, a)).astype(np.float32)
+
+
+def _requests(n, m, a, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        TreeRequest(uid=i, records=rng.normal(size=(m, a)).astype(np.float32))
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Hot-bucket promotion
+# ---------------------------------------------------------------------------
+
+
+class TestHotBucketPromotion:
+    def test_cold_buckets_never_measure(self, tmp_path):
+        enc = breadth_first_encode(paper_tree())
+        eng = TreeServeEngine(enc, max_batch=64,
+                              cache=TuneCache(tmp_path / "c.json"),
+                              retune=RetunePolicy(hot_waves=100))
+        eng.run(_requests(5, 50, 19))
+        eng.retuner.drain(timeout=60)
+        assert eng.stats.retunes == 0
+        assert len(eng.retuner.started) == 0
+        assert len(eng.stats.bucket_waves) == 1  # same bucket every wave
+
+    def test_hot_bucket_measured_once_and_promoted(self, tmp_path):
+        enc = breadth_first_encode(paper_tree())
+        cache = TuneCache(tmp_path / "c.json")
+        eng = TreeServeEngine(enc, max_batch=64, cache=cache,
+                              retune=RetunePolicy(hot_waves=3, warmup=1, iters=2))
+        reqs = _requests(10, 50, 19, seed=1)
+        eng.run(reqs)
+        eng.retuner.drain(timeout=120)
+        assert eng.retuner.errors == []
+        assert eng.stats.retunes == 1          # promoted exactly once
+        assert len(eng.retuner.started) == 1   # no duplicate launches
+
+        # the measured winner is persisted under the hot bucket's key and
+        # the evaluator's memo now carries it (the "retune" provenance)
+        key = next(iter(eng.stats.bucket_waves))
+        entry = cache.lookup(key)
+        assert entry is not None
+        cand, src = eng._eval._resolved[key]
+        assert src == "retune"
+        assert cand == Candidate.make(entry.variant, **entry.params)
+        for r in reqs:
+            assert np.array_equal(r.out, eval_serial(enc, r.records))
+
+    def test_request_path_not_blocked_by_measurement(self, tmp_path):
+        """note() must return immediately: a slow measurement runs on the
+        worker thread while waves keep being served."""
+        started = threading.Event()
+        release = threading.Event()
+
+        def slow_measure(batch):
+            started.set()
+            assert release.wait(timeout=60)
+            return None
+
+        promoted = []
+        ret = BackgroundRetuner(slow_measure, lambda k, e: promoted.append(k),
+                                RetunePolicy(hot_waves=1))
+        batch = _records(8, 4)
+        ret.note("bucket", batch)
+        assert started.wait(timeout=60)
+        # the worker is parked inside measure; further notes return instantly
+        t0 = time.perf_counter()
+        for _ in range(50):
+            ret.note("bucket", batch)
+        assert time.perf_counter() - t0 < 1.0
+        release.set()
+        ret.drain(timeout=60)
+        assert promoted == ["bucket"]
+
+    def test_failed_measurement_never_takes_serving_down(self, tmp_path):
+        def broken(batch):
+            raise RuntimeError("measurement exploded")
+
+        ret = BackgroundRetuner(broken, lambda k, e: None, RetunePolicy(hot_waves=1))
+        ret.note("bucket", _records(8, 4))
+        ret.drain(timeout=60)
+        assert ret.retunes == 0
+        assert len(ret.errors) == 1 and "exploded" in str(ret.errors[0][1])
+
+
+# ---------------------------------------------------------------------------
+# Atomic winner swap
+# ---------------------------------------------------------------------------
+
+
+class TestAtomicSwap:
+    def test_promote_swaps_resolution(self, tmp_path):
+        enc = breadth_first_encode(paper_tree())
+        ev = TunedEvaluator(enc, cache=TuneCache(tmp_path / "c.json"))
+        rec = _records(64, 19, seed=2)
+        before, _ = ev.resolve(rec)
+        forced = Candidate.make("jnp_speculative_gather", jumps_per_round=3)
+        assert before != forced
+        key = WorkloadShape.of(rec, enc, ev.depth).key()
+        ev.promote(key, forced)
+        after, _ = ev.resolve(rec)
+        assert after == forced
+        assert np.array_equal(np.asarray(ev(rec)), eval_serial(enc, rec))
+
+    def test_swap_under_concurrent_evaluation_is_bit_identical(self, tmp_path):
+        """Readers racing a promote must only ever see correct results —
+        either kernel, never a torn state."""
+        enc = breadth_first_encode(
+            random_tree(n_attrs=7, n_classes=5, max_depth=6, seed=9)
+        )
+        ev = TunedEvaluator(enc, cache=TuneCache(tmp_path / "c.json"))
+        rec = _records(96, 7, seed=3)
+        want = eval_serial(enc, rec)
+        key = WorkloadShape.of(rec, enc, ev.depth).key()
+        candidates = [
+            Candidate.make("jnp_data_parallel"),
+            Candidate.make("jnp_speculative_gather", jumps_per_round=2),
+            Candidate.make("jnp_speculative_onehot", jumps_per_round=1),
+        ]
+        stop = threading.Event()
+        failures: list = []
+
+        def reader():
+            while not stop.is_set():
+                out = np.asarray(ev(rec))
+                if not np.array_equal(out, want):
+                    failures.append(out)
+                    return
+
+        threads = [threading.Thread(target=reader) for _ in range(3)]
+        for t in threads:
+            t.start()
+        for i in range(30):
+            ev.promote(key, candidates[i % len(candidates)])
+            time.sleep(0.002)
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+        assert failures == []
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: engines re-tune under live traffic, results never change
+# ---------------------------------------------------------------------------
+
+
+class TestEngineRetuneBitIdentity:
+    def test_tree_engine_concurrent_retune_bit_identity(self, tmp_path):
+        """Serve waves while the background re-tune measures and swaps:
+        every response must equal the serial reference."""
+        enc = breadth_first_encode(paper_tree())
+        eng = TreeServeEngine(enc, max_batch=128,
+                              cache=TuneCache(tmp_path / "c.json"),
+                              retune=RetunePolicy(hot_waves=2, warmup=1, iters=2))
+        for round_ in range(6):  # re-tune fires mid-stream, traffic continues
+            reqs = _requests(4, 100, 19, seed=round_)
+            eng.run(reqs)
+            for r in reqs:
+                assert np.array_equal(r.out, eval_serial(enc, r.records)), round_
+        eng.retuner.drain(timeout=120)
+        assert eng.retuner.errors == []
+        assert eng.stats.retunes >= 1
+        # post-swap traffic still exact
+        reqs = _requests(3, 100, 19, seed=99)
+        eng.run(reqs)
+        for r in reqs:
+            assert np.array_equal(r.out, eval_serial(enc, r.records))
+
+    def test_forest_engine_retune_promotes_forest_bucket(self, tmp_path):
+        trees = [
+            breadth_first_encode(random_tree(n_attrs=9, n_classes=6, max_depth=d, seed=d))
+            for d in (3, 5, 7)
+        ]
+        forest = EncodedForest(trees)
+        cache = TuneCache(tmp_path / "c.json")
+        eng = ForestServeEngine(forest, max_batch=128, chunk_records=128,
+                                cache=cache,
+                                retune=RetunePolicy(hot_waves=2, warmup=1, iters=2))
+        for round_ in range(5):
+            reqs = _requests(1, 100, 9, seed=round_)
+            eng.run(reqs)
+            for r in reqs:
+                per = np.stack([eval_serial(forest.tree(i), r.records)
+                                for i in range(forest.n_trees)])
+                assert np.array_equal(r.out, per), round_
+        eng.retuner.drain(timeout=240)
+        assert eng.retuner.errors == []
+        assert eng.stats.retunes >= 1
+        # the forest bucket key now holds a measured family winner
+        key = next(iter(eng.stats.bucket_waves))
+        entry = cache.lookup(key)
+        assert entry is not None
+        assert entry.variant in FOREST_VARIANTS or entry.variant == PER_TREE_FAMILY
+        # and post-promotion traffic is still exact
+        reqs = _requests(1, 100, 9, seed=77)
+        eng.run(reqs)
+        per = np.stack([eval_serial(forest.tree(i), reqs[0].records)
+                        for i in range(forest.n_trees)])
+        assert np.array_equal(reqs[0].out, per)
+
+    def test_mesh_executor_retune_stores_shard_key(self):
+        """On a real mesh the re-tune must measure at the *shard* operating
+        point and store under the key _shard_kernel probes — otherwise the
+        background measurement is a no-op for multi-device serving."""
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["PYTHONPATH"] = os.path.join(repo, "src")
+        code = textwrap.dedent("""
+            import numpy as np, jax, tempfile, pathlib
+            from repro.core import EncodedForest, breadth_first_encode, random_tree, eval_serial
+            from repro.dist import ShardedForestEvaluator, ShardPlan
+            from repro.kernels.tree_eval import FOREST_VARIANTS
+            from repro.tune import TuneCache
+
+            assert jax.device_count() == 8
+            trees = [breadth_first_encode(random_tree(n_attrs=9, n_classes=6,
+                                                      max_depth=5, seed=i))
+                     for i in range(8)]
+            forest = EncodedForest(trees)
+            rec = np.random.default_rng(3).normal(size=(512, 9)).astype(np.float32)
+            oracle = np.stack([np.asarray(eval_serial(forest.tree(i), rec))
+                               for i in range(8)])
+            cache = TuneCache(pathlib.Path(tempfile.mkdtemp()) / 'c.json')
+            plan = ShardPlan(record_shards=4, tree_shards=2,
+                             algorithm='data_parallel', predicted=0.0)
+            ev = ShardedForestEvaluator(forest, plan=plan, cache=cache)
+            assert np.array_equal(np.asarray(ev(rec)), oracle)
+            pre_source = ev.resolved[1]
+
+            entry = ev.retune(rec, warmup=1, iters=2)
+            assert entry.variant in FOREST_VARIANTS, entry.variant
+            ev.invalidate_resolution()
+            assert np.array_equal(np.asarray(ev(rec)), oracle)
+            cand, source = ev.resolved
+            # the promoted shard-shape winner is what resolution now finds
+            assert source == 'cache', (pre_source, source)
+            assert cand.variant == entry.variant, (cand, entry)
+            print('OK')
+        """)
+        out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                             text=True, timeout=420, env=env)
+        assert out.returncode == 0, out.stderr[-3000:]
+        assert "OK" in out.stdout

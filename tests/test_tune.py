@@ -12,20 +12,33 @@ import pytest
 
 from repro.core import Node, breadth_first_encode, eval_serial, paper_tree, random_tree
 from repro.core.analysis import CostModel, speculative_wins
-from repro.kernels.tree_eval import VARIANTS, get_variant
+from repro.core.forest import EncodedForest
+from repro.kernels.tree_eval import (
+    FOREST_VARIANTS,
+    PER_TREE_FAMILY,
+    VARIANTS,
+    get_forest_variant,
+    get_variant,
+)
 from repro.tune import (
     Candidate,
+    ForestShape,
+    ForestTunedEvaluator,
     TuneCache,
     TuneEntry,
     TunedEvaluator,
     WorkloadShape,
     backend_tag,
+    forest_heuristic_candidate,
+    forest_search_space,
     heuristic_candidate,
     measured_d_mu,
     predicted_times,
     registry_fingerprint,
     search_space,
+    tune_forest_workload,
     tuned_eval,
+    tuned_eval_forest,
     tune_workload,
 )
 
@@ -412,6 +425,158 @@ class TestWiring:
         rec = _records(120, 9, seed=11)
         out = np.asarray(eval_forest_tuned(forest, rec, cache=TuneCache(tmp_path / "c.json")))
         assert out.shape == (3, 120)
+        for i in range(3):
+            assert np.array_equal(out[i], eval_serial(forest.tree(i), rec))
+
+    def test_forest_shape_buckets_and_keys(self):
+        s = ForestShape(t=3, m=100, n_nodes=31, n_attrs=19, depth_min=3, depth_max=11)
+        b = s.bucket()
+        assert b == ForestShape(t=4, m=128, n_nodes=128, n_attrs=128,
+                                depth_min=4, depth_max=16)
+        assert b.bucket() == b  # idempotent
+        # forest keys are disjoint from per-tree keys in the shared cache
+        tree_key = WorkloadShape(m=100, n_nodes=31, n_attrs=19, depth=11).key("cpu")
+        assert s.key("cpu") != tree_key and "|T4|" in s.key("cpu")
+        # the depth profile is part of the bucket identity
+        flat = ForestShape(t=3, m=100, n_nodes=31, n_attrs=19, depth_min=11, depth_max=11)
+        assert flat.key("cpu") != s.key("cpu")
+
+    def test_forest_search_space_spans_three_families(self):
+        shape = ForestShape(t=4, m=256, n_nodes=31, n_attrs=19, depth_min=6, depth_max=6)
+        cands = list(forest_search_space(shape, engines=("pallas", "jnp")))
+        variants = {c.variant for c in cands}
+        assert PER_TREE_FAMILY in variants
+        assert any(v.startswith("forest_vmap_") for v in variants)
+        assert any(v.startswith("forest_fused_") for v in variants)
+        for c in cands:
+            if c.variant == PER_TREE_FAMILY:
+                continue
+            spec = get_forest_variant(c.variant)
+            assert set(c.param_dict) <= set(spec.tunables)
+        # onehot candidates vanish for huge trees, per_tree never does
+        huge = ForestShape(t=4, m=256, n_nodes=100_000, n_attrs=19,
+                           depth_min=17, depth_max=17)
+        for c in forest_search_space(huge, engines=("pallas", "jnp")):
+            if c.variant != PER_TREE_FAMILY:
+                assert get_forest_variant(c.variant).jump_mode != "onehot"
+
+    def test_forest_heuristic_profile_drives_family(self):
+        """Homogeneous depth profiles go stacked (one launch, no padding
+        waste); spread profiles flip to the per-tree vector."""
+        uniform = ForestShape(t=8, m=1024, n_nodes=127, n_attrs=19,
+                              depth_min=6, depth_max=6)
+        c = forest_heuristic_candidate(uniform, d_mu=5.0)
+        assert c.variant != PER_TREE_FAMILY
+        spread = ForestShape(t=8, m=1024, n_nodes=127, n_attrs=19,
+                             depth_min=1, depth_max=24)
+        c = forest_heuristic_candidate(spread, d_mu=12.0, launch_overhead=1e-6)
+        assert c.variant == PER_TREE_FAMILY
+        # families filter is honoured
+        c = forest_heuristic_candidate(spread, families=("vmap",))
+        assert get_forest_variant(c.variant).family == "vmap"
+
+    def test_forest_evaluator_bit_identical_all_families(self, tmp_path):
+        trees = [
+            breadth_first_encode(random_tree(n_attrs=9, n_classes=6, max_depth=d, seed=d))
+            for d in (2, 5, 8)
+        ]
+        forest = EncodedForest(trees)
+        rec = _records(150, 9, seed=40)
+        ref = np.stack([eval_serial(forest.tree(i), rec) for i in range(3)])
+        for families in ((PER_TREE_FAMILY,), ("vmap",), ("fused",), None):
+            ev = ForestTunedEvaluator(
+                forest, cache=TuneCache(tmp_path / "c.json"), families=families
+            )
+            out = np.asarray(ev(rec))
+            assert out.shape == (3, 150)
+            assert np.array_equal(out, ref), families
+
+    def test_forest_autotune_persists_and_hits(self, tmp_path):
+        trees = [
+            breadth_first_encode(random_tree(n_attrs=7, n_classes=5, max_depth=4, seed=s))
+            for s in (1, 2)
+        ]
+        forest = EncodedForest(trees)
+        rec = _records(64, 7, seed=41)
+        cache = TuneCache(tmp_path / "c.json")
+        ev = ForestTunedEvaluator(forest, cache=cache, autotune=True,
+                                  measure_kw={"warmup": 1, "iters": 2})
+        ref = np.stack([eval_serial(forest.tree(i), rec) for i in range(2)])
+        assert np.array_equal(np.asarray(ev(rec)), ref)
+        # the forest winner landed under the forest bucket key
+        fkey = ev.shape_of(rec).key()
+        entry = cache.lookup(fkey)
+        assert entry is not None
+        assert entry.variant in FOREST_VARIANTS or entry.variant == PER_TREE_FAMILY
+
+        # a fresh evaluator on a fresh cache handle must hit, not re-tune
+        ev2 = ForestTunedEvaluator(forest, cache=TuneCache(tmp_path / "c.json"))
+        cand, source = ev2.resolve(rec)
+        assert source == "cache"
+        assert cand.variant == entry.variant
+        assert np.array_equal(np.asarray(ev2(rec)), ref)
+
+    def test_family_restricted_evaluator_ignores_foreign_cache_hit(self, tmp_path):
+        """A families-restricted evaluator must not run another family's
+        cached winner (it would silently invalidate e.g. the per-tree
+        baseline in the forest sweep bench)."""
+        trees = [breadth_first_encode(random_tree(n_attrs=7, n_classes=5,
+                                                  max_depth=4, seed=s))
+                 for s in (8, 9)]
+        forest = EncodedForest(trees)
+        rec = _records(64, 7, seed=45)
+        cache = TuneCache(tmp_path / "c.json")
+        restricted = ForestTunedEvaluator(forest, cache=cache,
+                                          families=(PER_TREE_FAMILY,))
+        # a sibling evaluator cached the vmap winner under the same bucket
+        cache.store(restricted.shape_of(rec).key(),
+                    TuneEntry(variant="forest_vmap_data_parallel", params={},
+                              median_ms=0.1))
+        cand, source = restricted.resolve(rec)
+        assert source == "heuristic"          # the foreign hit was refused
+        assert cand.variant == PER_TREE_FAMILY
+        # an unrestricted evaluator does take the hit
+        cand, source = ForestTunedEvaluator(forest, cache=cache).resolve(rec)
+        assert source == "cache" and cand.variant == "forest_vmap_data_parallel"
+
+    def test_forest_stale_cache_entry_falls_back(self, tmp_path):
+        trees = [breadth_first_encode(random_tree(n_attrs=5, n_classes=4,
+                                                  max_depth=3, seed=s))
+                 for s in (3, 4)]
+        forest = EncodedForest(trees)
+        rec = _records(32, 5, seed=42)
+        cache = TuneCache(tmp_path / "c.json")
+        ev = ForestTunedEvaluator(forest, cache=cache)
+        cache.store(ev.shape_of(rec).key(),
+                    TuneEntry(variant="gone_forest_variant", params={}, median_ms=1.0))
+        cand, source = ev.resolve(rec)
+        assert source == "heuristic"
+        ref = np.stack([eval_serial(forest.tree(i), rec) for i in range(2)])
+        assert np.array_equal(np.asarray(ev(rec)), ref)
+
+    def test_tune_forest_workload_winner_is_measured_minimum(self, tmp_path):
+        trees = [breadth_first_encode(random_tree(n_attrs=5, n_classes=4,
+                                                  max_depth=4, seed=s))
+                 for s in (5, 6, 7)]
+        forest = EncodedForest(trees)
+        rec = _records(48, 5, seed=43)
+        entry, measurements = tune_forest_workload(
+            rec, forest, cache=TuneCache(tmp_path / "c.json"), warmup=1, iters=2
+        )
+        ok = [m for m in measurements if not m.failed]
+        assert entry.median_ms == min(m.median_ms for m in ok)
+        variants = {m.candidate.variant for m in ok}
+        assert PER_TREE_FAMILY in variants  # all families were really timed
+        assert any(v in FOREST_VARIANTS for v in variants)
+
+    def test_eval_forest_tuned_functional_wrapper(self, tmp_path):
+        trees = [breadth_first_encode(random_tree(n_attrs=9, n_classes=6,
+                                                  max_depth=d, seed=d))
+                 for d in (2, 5, 8)]
+        forest = EncodedForest(trees)
+        rec = _records(120, 9, seed=44)
+        out = np.asarray(tuned_eval_forest(rec, forest,
+                                           cache=TuneCache(tmp_path / "c.json")))
         for i in range(3):
             assert np.array_equal(out[i], eval_serial(forest.tree(i), rec))
 
