@@ -98,9 +98,11 @@ def _sweep(iters: int, warmup: int) -> dict:
                 continue
             plan = make_plan(wl, r, g, mesh_cost)
             ev = ShardedForestEvaluator(forest, plan=plan, cache=cache)
+            # fetch to host so the monolithic timing is apples-to-apples with
+            # the streaming path, whose eval() returns host arrays
             t = time_fn(
                 f"{name}/mesh{r}x{g}",
-                lambda: jax.block_until_ready(ev(rec)),
+                lambda: np.asarray(jax.block_until_ready(ev(rec))),
                 iters=iters,
                 warmup=warmup,
                 workload=name,
@@ -151,14 +153,29 @@ def _sweep(iters: int, warmup: int) -> dict:
         best_plan = make_plan(wl, *meas_key, mesh_cost)
         ev = ShardedForestEvaluator(forest, plan=best_plan, cache=cache)
         chunker = StreamingChunker(ev, chunk_records=max(m // 4, 1))
+        # warmup must cover the coalescing ladder (two evals per explored
+        # size: one compile, one measurement) so iters time the steady state
         t_stream = time_fn(
             f"{name}/stream",
             lambda: chunker.eval(rec),
             iters=iters,
-            warmup=warmup,
+            warmup=max(warmup, 6),
             workload=name,
             mesh=list(meas_key),
             mode="stream_chunked",
+        )
+        # re-time the monolithic call back-to-back on the *same* evaluator
+        # (same compiled program, same machine state) — the mesh-loop number
+        # above was taken minutes earlier and drifts by more than the
+        # chunked-vs-monolithic difference
+        t_mono = time_fn(
+            f"{name}/monolithic",
+            lambda: np.asarray(jax.block_until_ready(ev(rec))),
+            iters=iters,
+            warmup=warmup,
+            workload=name,
+            mesh=list(meas_key),
+            mode="monolithic",
         )
         entries.append({
             "workload": name,
@@ -167,12 +184,17 @@ def _sweep(iters: int, warmup: int) -> dict:
             "mode": "stream_chunked",
             "chunk_records": chunker.chunk_records,
             "measured_ms": round(t_stream.median_us / 1e3, 6),
-            "monolithic_ms": round(measured[meas_key], 6),
+            "monolithic_ms": round(t_mono.median_us / 1e3, 6),
             "chunk_ms_median": round(float(np.median(chunker.stats.chunk_ms)), 6),
+            "overlap_ratio_mean": round(float(np.mean(chunker.stats.overlap_ratio)), 4),
+            "coalesced_chunk_records": int(chunker.stats.coalesced_chunk_records
+                                           or chunker.chunk_records),
         })
         print(
-            f"  stream ({chunker.chunk_records}/chunk) {t_stream.median_us/1e3:9.3f} ms"
-            f" vs monolithic {measured[meas_key]:9.3f} ms"
+            f"  stream ({chunker.chunk_records}/chunk, coalesced to "
+            f"{chunker.stats.coalesced_chunk_records or chunker.chunk_records}) "
+            f"{t_stream.median_us/1e3:9.3f} ms"
+            f" vs monolithic {t_mono.median_us/1e3:9.3f} ms"
         )
 
     from benchmarks import common

@@ -14,7 +14,8 @@ import sys
 import time
 
 
-BENCHES = ["table1", "fig4", "analysis", "m_sweep", "geometry", "moe_router", "tune", "dist_sweep"]
+BENCHES = ["table1", "fig4", "analysis", "m_sweep", "geometry", "moe_router", "tune",
+           "cascade", "dist_sweep"]
 
 
 def _run(name: str) -> None:
@@ -44,13 +45,16 @@ def _run(name: str) -> None:
     elif name == "tune":
         from benchmarks.tune_sweep import main
         main()
+    elif name == "cascade":
+        from benchmarks.cascade_sweep import main
+        main()
     elif name == "dist_sweep":
         from benchmarks.dist_sweep import main
         main()
     else:
         raise SystemExit(f"unknown bench {name!r}; available: {BENCHES}")
     entries = common.drain_records()
-    if entries and name not in ("tune", "dist_sweep"):  # these write richer reports
+    if entries and name not in ("tune", "cascade", "dist_sweep"):  # richer reports
         path = common.write_bench_json(name, entries)
         print(f"--- wrote {path}")
     print(f"--- {name} done in {time.perf_counter() - t0:.1f}s")

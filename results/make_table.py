@@ -155,17 +155,24 @@ def render_dist(data: dict) -> str:
     out.append("")
     out.append("### Streaming chunker (double-buffered) vs monolithic")
     out.append("")
-    out.append("| workload | mesh R×G | chunk records | stream ms | monolithic ms "
-               "| chunk median ms |")
-    out.append("|" + "---|" * 6)
+    out.append("Chunk sizes adapt online (throughput-feedback coalescing): "
+               "`coalesced` is the effective chunk size after the sweep; "
+               "`overlap` is the mean fraction of each chunk's submit→ready "
+               "window shared with the previous in-flight chunk.")
+    out.append("")
+    out.append("| workload | mesh R×G | chunk records | coalesced | stream ms "
+               "| monolithic ms | chunk median ms | overlap |")
+    out.append("|" + "---|" * 8)
     for e in data.get("entries", []):
         if e.get("mode") != "stream_chunked":
             continue
         r, g = e["mesh"]
         out.append(
             f"| {e['workload']} | {r}×{g} | {e['chunk_records']} "
+            f"| {e.get('coalesced_chunk_records', e['chunk_records'])} "
             f"| {_ms(e['measured_ms'])} | {_ms(e['monolithic_ms'])} "
-            f"| {_ms(e['chunk_ms_median'])} |"
+            f"| {_ms(e['chunk_ms_median'])} "
+            f"| {e.get('overlap_ratio_mean', 0.0):.2f} |"
         )
     out.append("")
     out.append("### Plan-predicted vs measured winners")
@@ -190,8 +197,48 @@ def render_dist(data: dict) -> str:
     return "\n".join(out)
 
 
+def render_cascade(data: dict) -> str:
+    """BENCH_cascade.json → early-exit cascade accuracy/latency report."""
+    out = ["## Early-exit cascade sweep (`BENCH_cascade.json`)", ""]
+    out.append(f"Backend `{data.get('backend', '?')}`, jax {data.get('jax', '?')}: "
+               f"{data.get('n_trees', '?')}-tree bagged CART forest, "
+               f"{data.get('n_classes', '?')} classes, M={data.get('m', '?')} per mix.  "
+               "`bound=1.0` is the provable setting (early exits cannot be "
+               "flipped by the unseen trees, so its accuracy delta is exactly "
+               "0); relaxed bounds trade accuracy for latency; `bound=None` "
+               "runs every stage (staging overhead floor).")
+    out.append("")
+    out.append("| mix | variant | stages | bound | median ms | Δaccuracy "
+               "| mean trees | vs fused | vs vmap |")
+    out.append("|" + "---|" * 9)
+    for e in data.get("entries", []):
+        bound = e.get("bound")
+        out.append(
+            f"| {e['mix']} | {e['variant']} | {e['stages']} "
+            f"| {'—' if bound is None else bound} "
+            f"| {_ms(e['median_ms'])} | {e['accuracy_delta']:.4f} "
+            f"| {e['mean_trees_evaluated']:.2f} "
+            f"| {'x{:.2f}'.format(e['speedup_vs_fused']) if 'speedup_vs_fused' in e else '—'} "
+            f"| {'x{:.2f}'.format(e['speedup_vs_vmap']) if 'speedup_vs_vmap' in e else '—'} |"
+        )
+    s = data.get("summary", {})
+    if s:
+        out.append("")
+        out.append(
+            f"Skewed-mix provable cascade (bound=1.0, {s.get('skewed_provable_stages', '?')} "
+            f"stages): **x{s.get('skewed_provable_speedup_vs_fused', 0):.2f}** vs the fused "
+            f"stacked kernel (acceptance ≥1.5: "
+            f"{'met' if s.get('meets_1p5x_vs_fused') else 'NOT MET'}), "
+            f"x{s.get('skewed_provable_speedup_vs_vmap', 0):.2f} vs vmap, accuracy delta "
+            f"{s.get('skewed_provable_accuracy_delta', 0):.4f} (budget ≤0.005: "
+            f"{'met' if s.get('meets_accuracy_budget') else 'NOT MET'})."
+        )
+    return "\n".join(out)
+
+
 _RENDERERS = {
     "BENCH_tree_eval.json": render_tree_eval,
+    "BENCH_cascade.json": render_cascade,
     "BENCH_dist.json": render_dist,
 }
 
@@ -213,7 +260,7 @@ def render_benchmarks(results_dir: Path = RESULTS_DIR) -> str:
         "```",
         "",
         "*The JSONs themselves are produced by the benches "
-        "(`PYTHONPATH=src python -m benchmarks.run tune dist_sweep`); "
+        "(`PYTHONPATH=src python -m benchmarks.run tune cascade dist_sweep`); "
         "see `docs/tuning.md` for how to read them.*",
         "",
     ]

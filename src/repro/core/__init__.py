@@ -33,6 +33,7 @@ from repro.core.cart import CartConfig, accuracy, train_cart
 from repro.core.forest import (
     EncodedForest,
     eval_forest,
+    eval_forest_cascade,
     eval_forest_sharded,
     eval_forest_tuned,
     majority_vote,
@@ -80,6 +81,7 @@ __all__ = [
     "train_cart",
     "EncodedForest",
     "eval_forest",
+    "eval_forest_cascade",
     "eval_forest_sharded",
     "eval_forest_tuned",
     "majority_vote",

@@ -141,6 +141,46 @@ def eval_forest_sharded(
     )(records)
 
 
+def eval_forest_cascade(
+    forest: EncodedForest,
+    records,
+    *,
+    n_classes: int,
+    stages: int = 2,
+    bound: float | None = 1.0,
+    plan=None,
+    calibration=None,
+    engine: str | None = None,
+    deadline_ms: float | None = None,
+):
+    """Staged early-exit majority vote — the forest-scale dual of speculation.
+
+    Trees are evaluated in stages (most discriminative first); records whose
+    vote margin already exceeds ``bound`` times the remaining tree count exit
+    early, and the survivors are compacted into dense tiles between stages.
+    With ``bound=None`` every tree runs and the classes are bit-identical to
+    ``majority_vote(eval_forest_tuned(forest, records), n_classes)``; with
+    ``bound=1.0`` the exits are provably unable to change the answer, so the
+    classes still match exactly while easy records skip most of the forest.
+
+    Returns a :class:`repro.kernels.tree_eval.CascadeResult` — classes plus
+    per-record margin, trees evaluated, exit stage and confidence.
+    """
+    from repro.kernels.tree_eval import eval_cascade
+
+    return eval_cascade(
+        forest,
+        records,
+        n_classes=n_classes,
+        stages=stages,
+        bound=bound,
+        plan=plan,
+        calibration=calibration,
+        engine=engine,
+        deadline_ms=deadline_ms,
+    )
+
+
 def majority_vote(per_tree: jax.Array, n_classes: int) -> jax.Array:
     """(T, M) per-tree classes → (M,) majority class."""
     onehot = jax.nn.one_hot(per_tree, n_classes, dtype=jnp.int32)  # (T, M, C)

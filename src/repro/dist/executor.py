@@ -92,7 +92,7 @@ class ShardedForestEvaluator:
         self._n_devices = n_devices
         self.plan: ShardPlan | None = None
         self.mesh = None
-        self.record_sharding = None   # set once planned; the chunker device_puts with it
+        self.record_sharding = None   # set once planned; exposed for callers
         self.resolved = None          # (Candidate, source) provenance
         self.stats = DistStats()
         self._fast: dict[int, tuple] = {}   # M → (fn, m_pad, t_pad, tree_args)
@@ -322,21 +322,36 @@ class ShardedForestEvaluator:
             # r: (M/R, A) local records; tree tables: (T/G, N) local stack
             return jax.vmap(lambda a_, t_, c_, k_: kern(r, a_, t_, c_, k_))(ai, ti, ci, ki)
 
-        fn = jax.jit(
-            _shard_map(
-                body,
-                mesh=mesh,
-                in_specs=(
-                    P("records", None),
-                    P("trees", None),
-                    P("trees", None),
-                    P("trees", None),
-                    P("trees", None),
-                ),
-                out_specs=P("trees", "records"),
-                **_SMAP_KW,
-            )
+        smap = _shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(
+                P("records", None),
+                P("trees", None),
+                P("trees", None),
+                P("trees", None),
+                P("trees", None),
+            ),
+            out_specs=P("trees", "records"),
+            **_SMAP_KW,
         )
+        n_trees = forest.n_trees
+
+        def run(r, ai, ti, ci, ki):
+            # Divisibility pad, shard_map and the output slice are traced
+            # into ONE program: a streamed chunk costs a single dispatch, not
+            # a pad program + an eval program + a slice program.  That fixed
+            # per-chunk overhead is what made chunked streaming lose to the
+            # monolithic call on transfer-free backends.
+            if m_pad != m:
+                r = jnp.zeros((m_pad, r.shape[1]), r.dtype).at[:m].set(r)
+            return smap(r, ai, ti, ci, ki)[:n_trees, :m]
+
+        # Donate the records buffer where donation is real (XLA CPU ignores
+        # it with a warning): streamed chunks are single-use by contract, so
+        # their pages can be recycled for the padded copy / the output.
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        fn = jax.jit(run, donate_argnums=donate)
         return fn, m_pad, t_pad, tree_args
 
     # -- evaluation ---------------------------------------------------------
@@ -352,6 +367,10 @@ class ShardedForestEvaluator:
           result is not blocked on the device, so callers (stream chunker,
           serve engines, benches) own synchronisation, which is what lets
           chunk transfer overlap evaluation.
+
+        On non-CPU backends the device records buffer is donated to the
+        evaluation (chunks are single-use by the streaming contract); pass a
+        fresh array — or host data, converted here — per call.
         """
         if not (isinstance(records, jax.Array) and records.dtype == jnp.float32):
             records = jnp.asarray(records, jnp.float32)
@@ -375,12 +394,7 @@ class ShardedForestEvaluator:
             with self._swap_lock:
                 if gen == self._gen:   # don't cache a pre-swap resolution
                     self._fast[m] = fast
-        fn, m_pad, t_pad, tree_args = fast
-        padded = (
-            records
-            if m_pad == m
-            else jnp.zeros((m_pad, records.shape[1]), records.dtype).at[:m].set(records)
-        )
-        padded = jax.device_put(padded, self.record_sharding)
-        out = fn(padded, *tree_args)   # (t_pad, m_pad)
-        return out[: self.forest.n_trees, :m]
+        fn, _m_pad, _t_pad, tree_args = fast
+        # fn pads, reshards, evaluates and slices in one program — one
+        # asynchronous dispatch per call, whatever sharding the input has
+        return fn(records, *tree_args)   # (n_trees, m)

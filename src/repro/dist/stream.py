@@ -6,12 +6,28 @@ For segmentation-scale streams (millions of records) the copy need not
 serialize: JAX dispatch is asynchronous, so submitting chunk k+1's
 ``device_put`` + evaluation while chunk k is still running overlaps the σ·M
 wire time with compute, hiding min(t_s, T_eval) per chunk.  The chunker
-keeps at most ``inflight`` chunks pending (double buffering at the default
-of 2) so host memory and device queues stay bounded.
+submits *before* it drains — chunk k+1's dispatch is queued before the host
+blocks on chunk k — and keeps at most ``inflight`` chunks pending after each
+submit settles, so host memory and device queues stay bounded.
 
-Per-chunk submit→ready latency lands in :class:`StreamStats` (and in the
-caller's stats via ``on_chunk``) — the stream analogue of
-``TreeServeEngine``'s per-wave accounting.
+Two per-chunk measurements land in :class:`StreamStats` (and in the caller's
+stats via ``on_chunk``):
+
+* ``chunk_ms`` — submit→ready latency, the stream analogue of
+  ``TreeServeEngine``'s per-wave accounting;
+* ``overlap_ratio`` — the fraction of this chunk's submit→ready window
+  during which the *previous* chunk was still in flight, i.e. how much of
+  the pipeline actually ran double-buffered (0.0 for the first chunk).
+
+Chunking is only a win while the overlapped transfer outweighs the fixed
+per-dispatch cost; on transfer-free backends (CPU, fully resident data) it
+is pure overhead.  With ``auto_coalesce`` (default) the chunker measures its
+own throughput per effective chunk size and grows the size — up to
+``max_coalesce``× the configured ``chunk_records`` — while bigger chunks
+keep winning, retreating to the best size seen when they stop.  The first
+``eval()`` always runs at the configured ``chunk_records`` (sizes are only
+explored once a baseline throughput exists), so one-shot callers see
+exactly the chunk geometry they asked for.
 """
 
 from __future__ import annotations
@@ -31,6 +47,10 @@ class StreamStats:
     records: int = 0
     wall_s: float = 0.0                 # submit-first → drain-last, per eval()
     chunk_ms: list = dataclasses.field(default_factory=list)  # submit→ready per chunk
+    # fraction of each chunk's submit→ready window shared with the previous
+    # in-flight chunk (0.0 for the first chunk of an eval)
+    overlap_ratio: list = dataclasses.field(default_factory=list)
+    coalesced_chunk_records: int = 0    # effective chunk size after adaptation
 
 
 class StreamingChunker:
@@ -38,30 +58,70 @@ class StreamingChunker:
 
     ``evaluator`` is any callable records → (T, m) that does *not* block on
     the device (:class:`repro.dist.ShardedForestEvaluator` by contract); the
-    chunker owns synchronisation.  When the evaluator exposes a
-    ``record_sharding``, chunks are ``device_put`` with it so the transfer
-    lands sharded — no gather-then-scatter hop through device 0.
+    chunker owns synchronisation.  Sharding and divisibility padding happen
+    inside the evaluator's single fused program, so each chunk costs exactly
+    one asynchronous dispatch here.
     """
 
     def __init__(self, evaluator, *, chunk_records: int = 65536, inflight: int = 2,
-                 stats: StreamStats | None = None):
+                 stats: StreamStats | None = None, auto_coalesce: bool = True,
+                 max_coalesce: int = 8):
         if chunk_records < 1:
             raise ValueError("chunk_records must be >= 1")
         self.evaluator = evaluator
         self.chunk_records = chunk_records
         self.inflight = max(1, inflight)
         self.stats = stats if stats is not None else StreamStats()
+        self.auto_coalesce = auto_coalesce
+        self.max_coalesce = max(1, int(max_coalesce))
+        self._effective = chunk_records      # current adapted chunk size
+        self._evals = 0
+        self._tput: dict[int, float] = {}    # effective size → records/s (EMA)
+        self._seen: set[int] = set()         # sizes whose compile eval is spent
+        self._prev_ready: float | None = None
 
     def _drain_one(self, pending: deque, outs: list, on_chunk) -> None:
         out, t_submit, n = pending.popleft()
         arr = np.asarray(jax.block_until_ready(out))
-        latency_ms = (time.perf_counter() - t_submit) * 1e3
+        t_ready = time.perf_counter()
+        latency_ms = (t_ready - t_submit) * 1e3
+        window = max(t_ready - t_submit, 1e-9)
+        if self._prev_ready is None:
+            overlap = 0.0
+        else:
+            overlap = min(max((self._prev_ready - t_submit) / window, 0.0), 1.0)
+        self._prev_ready = t_ready
         self.stats.chunks += 1
         self.stats.records += n
         self.stats.chunk_ms.append(latency_ms)
+        self.stats.overlap_ratio.append(overlap)
         if on_chunk is not None:
             on_chunk(latency_ms, n)
         outs.append(arr)
+
+    def _note_eval(self, size: int, n_chunks: int, records: int, wall: float) -> None:
+        """Throughput-feedback coalescing: grow the effective chunk size while
+        bigger chunks keep winning, retreat to the best size seen when not."""
+        if not self.auto_coalesce or records == 0 or wall <= 0.0:
+            return
+        if size not in self._seen:
+            # the first eval at a new size pays jit compilation for the new
+            # chunk shape; stay here one more eval and measure compile-free
+            self._seen.add(size)
+            self.stats.coalesced_chunk_records = self._effective
+            return
+        tput = records / wall
+        prev = self._tput.get(size)
+        self._tput[size] = tput if prev is None else 0.5 * prev + 0.5 * tput
+        best = max(self._tput, key=self._tput.get)
+        if best != size:
+            self._effective = best       # the explored size lost; go back
+        else:
+            cap = self.chunk_records * self.max_coalesce
+            nxt = min(size * 2, cap)
+            if n_chunks > 1 and nxt > size and nxt not in self._tput:
+                self._effective = nxt    # current best; explore one size up
+        self.stats.coalesced_chunk_records = self._effective
 
     def eval(self, records, *, on_chunk=None) -> np.ndarray:
         """Evaluate a (possibly huge) record batch; returns host (T, M).
@@ -74,26 +134,35 @@ class StreamingChunker:
         t0 = time.perf_counter()
         pending: deque = deque()
         outs: list[np.ndarray] = []
-        for start in range(0, m, self.chunk_records):
-            # drain before submit so at most ``inflight`` chunks are ever
-            # resident (the documented double-buffer bound)
-            while len(pending) >= self.inflight:
-                self._drain_one(pending, outs, on_chunk)
-            chunk = rec[start : start + self.chunk_records]
-            sharding = getattr(self.evaluator, "record_sharding", None)
-            dev = jnp.asarray(chunk)
-            if sharding is not None and chunk.shape[0] % sharding.mesh.shape.get("records", 1) == 0:
-                # full chunks land pre-sharded; a ragged tail chunk goes in
-                # unsharded and picks up its padding inside the executor
-                dev = jax.device_put(dev, sharding)
-            out = self.evaluator(dev)
+        self._prev_ready = None
+        # the first eval honours the configured chunk size exactly; adapted
+        # sizes only apply once a baseline throughput has been measured
+        size = self._effective if (self.auto_coalesce and self._evals > 0) else self.chunk_records
+        n_chunks = 0
+        for start in range(0, m, size):
+            chunk = rec[start : start + size]
+            # the executor's fused program shards/pads the chunk as part of
+            # its single dispatch, so no explicit device_put hop is needed —
+            # the dispatch (and with it the transfer) is queued asynchronously
+            out = self.evaluator(jnp.asarray(chunk))
             pending.append((out, time.perf_counter(), chunk.shape[0]))
+            n_chunks += 1
+            # submit-before-drain: the new chunk's dispatch is already queued
+            # when the host blocks on the oldest one, so device work never
+            # gaps on the drain; at most ``inflight`` stay pending after it
+            while len(pending) > self.inflight:
+                self._drain_one(pending, outs, on_chunk)
         while pending:
             self._drain_one(pending, outs, on_chunk)
-        self.stats.wall_s += time.perf_counter() - t0
+        wall = time.perf_counter() - t0
+        self.stats.wall_s += wall
+        self._evals += 1
+        self._note_eval(size, n_chunks, m, wall)
         if not outs:
             n_trees = getattr(getattr(self.evaluator, "forest", None), "n_trees", 0)
             return np.zeros((n_trees, 0), np.int32)
+        if len(outs) == 1:       # fully coalesced: no concat copy
+            return outs[0]
         return np.concatenate(outs, axis=1)
 
 

@@ -318,6 +318,150 @@ def fused_speculative_pallas(
     )(records, attr_select, threshold, child, class_val)
 
 
+# ---------------------------------------------------------------------------
+# fused vote-accumulating kernels (cascade stages)
+# ---------------------------------------------------------------------------
+#
+# Same grid as the fused class kernels — (M/block_m, T) with trees innermost —
+# but instead of materialising the (T, M) per-tree class matrix the output is
+# the (M, C) per-record *vote histogram*: the output BlockSpec's index map
+# ignores the tree axis, so every tree-step of one record tile revisits the
+# same (BM, C) VMEM block and accumulates its one-hot vote into it
+# (initialised at j == 0).  The per-tree classes never leave VMEM, which is
+# what makes the cascade's margin bookkeeping free of a (T, M) round trip.
+
+
+def _accumulate_votes(out_ref, cls):
+    """Add one tree's one-hot votes for ``cls`` (BM, 1) into ``out_ref``."""
+    bm, c = out_ref.shape
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (bm, c), 1)
+    votes = (lanes == cls).astype(jnp.int32)                       # (BM, C)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = votes
+
+    @pl.when(j != 0)
+    def _add():
+        out_ref[...] += votes
+
+
+def _fused_votes_speculative_body(
+    records_ref,      # (BM, A) VMEM — shared across the tree axis
+    attr_sel_ref,     # (1, A, N) VMEM
+    threshold_ref,    # (1, N) VMEM
+    child_ref,        # (1, N) VMEM
+    class_val_ref,    # (1, N) VMEM
+    out_ref,          # (BM, C) VMEM — revisited across the tree axis
+    *,
+    total_jumps: int,
+    jump_mode: str,
+):
+    cls = _speculative_compute(
+        records_ref[...].astype(jnp.float32),
+        attr_sel_ref[0].astype(jnp.float32),
+        threshold_ref[...],
+        child_ref[...],
+        class_val_ref[...],
+        total_jumps=total_jumps,
+        jump_mode=jump_mode,
+    )
+    _accumulate_votes(out_ref, cls)
+
+
+def fused_votes_speculative_pallas(
+    records: jax.Array,     # (M, A) — padded
+    attr_select: jax.Array, # (T, A, N) — per-tree padded one-hot
+    threshold: jax.Array,   # (T, N)
+    child: jax.Array,       # (T, N)
+    class_val: jax.Array,   # (T, N)
+    *,
+    n_classes: int,         # padded class-lane count C
+    total_jumps: int,
+    block_m: int,
+    jump_mode: str = "gather",
+    interpret: bool = True,
+) -> jax.Array:
+    """One speculative launch accumulating forest votes. Returns (M, C)."""
+    m, a = records.shape
+    t, n = threshold.shape
+    assert m % block_m == 0, (m, block_m)
+    grid = (m // block_m, t)
+    kernel = functools.partial(
+        _fused_votes_speculative_body, total_jumps=total_jumps, jump_mode=jump_mode
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, a), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, a, n), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n_classes), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n_classes), jnp.int32),
+        interpret=interpret,
+    )(records, attr_select, threshold, child, class_val)
+
+
+def _fused_votes_data_parallel_body(
+    records_ref,      # (BM, A) VMEM
+    attr_idx_ref,     # (1, N) VMEM (int32)
+    threshold_ref,    # (1, N) VMEM
+    child_ref,        # (1, N) VMEM
+    class_val_ref,    # (1, N) VMEM
+    out_ref,          # (BM, C) VMEM — revisited across the tree axis
+    *,
+    max_depth: int,
+):
+    cls = _data_parallel_compute(
+        records_ref[...].astype(jnp.float32),
+        attr_idx_ref[...],
+        threshold_ref[...],
+        child_ref[...],
+        class_val_ref[...],
+        max_depth=max_depth,
+    )
+    _accumulate_votes(out_ref, cls)
+
+
+def fused_votes_data_parallel_pallas(
+    records: jax.Array,    # (M, A) padded
+    attr_idx: jax.Array,   # (T, N)
+    threshold: jax.Array,  # (T, N)
+    child: jax.Array,      # (T, N)
+    class_val: jax.Array,  # (T, N)
+    *,
+    n_classes: int,        # padded class-lane count C
+    max_depth: int,
+    block_m: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """One data-parallel launch accumulating forest votes. Returns (M, C)."""
+    m, a = records.shape
+    t, n = threshold.shape
+    assert m % block_m == 0, (m, block_m)
+    grid = (m // block_m, t)
+    kernel = functools.partial(_fused_votes_data_parallel_body, max_depth=max_depth)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, a), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, n_classes), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n_classes), jnp.int32),
+        interpret=interpret,
+    )(records, attr_idx, threshold, child, class_val)
+
+
 def _fused_data_parallel_body(
     records_ref,      # (BM, A) VMEM
     attr_idx_ref,     # (1, N) VMEM (int32)

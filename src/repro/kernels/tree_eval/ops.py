@@ -327,6 +327,108 @@ def forest_eval_fused(
     return out[:, :m]
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "algorithm", "block_m", "jump_mode", "jumps", "max_depth", "c_pad", "interpret",
+    ),
+)
+def _forest_votes_padded(
+    records,
+    attr_select,
+    attr_idx,
+    threshold,
+    child,
+    class_val,
+    *,
+    algorithm: str,
+    block_m: int,
+    jump_mode: str,
+    jumps: int,
+    max_depth: int,
+    c_pad: int,
+    interpret: bool,
+):
+    if algorithm == "speculative":
+        return _k.fused_votes_speculative_pallas(
+            records,
+            attr_select,
+            threshold,
+            child,
+            class_val,
+            n_classes=c_pad,
+            total_jumps=jumps,
+            block_m=block_m,
+            jump_mode=jump_mode,
+            interpret=interpret,
+        )
+    if algorithm == "data_parallel":
+        return _k.fused_votes_data_parallel_pallas(
+            records,
+            attr_idx,
+            threshold,
+            child,
+            class_val,
+            n_classes=c_pad,
+            max_depth=max_depth,
+            block_m=block_m,
+            interpret=interpret,
+        )
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def forest_votes_fused(
+    records,
+    forest: "PackedForest | object",
+    *,
+    n_classes: int,
+    n_attrs: int | None = None,
+    algorithm: str = "speculative",
+    jump_mode: str = "gather",
+    block_m: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Accumulate the forest's class votes in one fused Pallas launch.
+
+    The per-tree classes stay inside VMEM: each tree grid-step adds its
+    one-hot vote into a persistent (block_m, C_pad) output tile, so the
+    (T, M) class matrix is never materialised in HBM.  This is the stage
+    primitive of the cascade evaluator.
+
+    Returns:
+      (M, n_classes) int32 vote counts; ``argmax`` along the last axis
+      reproduces :func:`repro.core.forest.majority_vote` exactly.
+    """
+    if not isinstance(forest, PackedForest):
+        if n_attrs is None:
+            n_attrs = int(np.asarray(records).shape[-1])
+        forest = PackedForest(forest, n_attrs)
+    if interpret is None:
+        interpret = not on_tpu()
+    if block_m is None:
+        block_m = choose_block_m(forest.n_nodes, forest.n_attrs_padded, jump_mode=jump_mode)
+    c_pad = _round_up(max(int(n_classes), 2), LANE)
+    records = jnp.asarray(records)
+    padded, m = _pad_records(records, block_m, forest.n_attrs_padded)
+    jumps = max(1, math.ceil(math.log2(max(forest.max_depth, 2))))
+    out = _forest_votes_padded(
+        padded,
+        forest.attr_select,
+        forest.attr_idx,
+        forest.threshold,
+        forest.child,
+        forest.class_val,
+        algorithm=algorithm,
+        block_m=block_m,
+        jump_mode=jump_mode,
+        jumps=jumps,
+        max_depth=forest.max_depth,
+        c_pad=c_pad,
+        interpret=interpret,
+    )
+    return out[:m, :n_classes]
+
+
 # ---------------------------------------------------------------------------
 # Variant registry (consumed by repro.tune)
 # ---------------------------------------------------------------------------

@@ -33,6 +33,58 @@ def tree_eval_ref(
     return class_val[idx]
 
 
+def cascade_eval_ref(
+    records,
+    attr_idx,
+    threshold,
+    child,
+    class_val,
+    *,
+    max_depth: int,
+    order,
+    stage_sizes,
+    n_classes: int,
+    bound: float | None,
+):
+    """Serial oracle for the staged early-exit cascade.
+
+    Evaluates every tree up front with :func:`forest_eval_ref`, then replays
+    the stage loop per record in plain numpy: accumulate votes stage by
+    stage and stop once ``top1 - top2 > bound * remaining``.  Returns
+    ``(classes, exit_stage, trees_evaluated)`` numpy arrays matching
+    :class:`repro.kernels.tree_eval.cascade.CascadeEvaluator` semantics
+    (without deadlines).
+    """
+    import numpy as np
+
+    per_tree = np.asarray(
+        forest_eval_ref(
+            records, attr_idx, threshold, child, class_val, max_depth=max_depth
+        )
+    )  # (T, M)
+    t_total, m = per_tree.shape
+    c = max(int(n_classes), 2)
+    classes = np.zeros((m,), np.int32)
+    exit_stage = np.full((m,), -1, np.int32)
+    trees_evaluated = np.zeros((m,), np.int32)
+    for r in range(m):
+        votes = np.zeros((c,), np.int64)
+        done = 0
+        for s, size in enumerate(stage_sizes):
+            for j in range(done, done + size):
+                votes[per_tree[order[j], r]] += 1
+            done += size
+            trees_evaluated[r] = done
+            remaining = t_total - done
+            if bound is not None and remaining > 0:
+                top2 = np.sort(votes)[-2:]
+                if top2[1] - top2[0] > bound * remaining:
+                    exit_stage[r] = s
+                    break
+        classes[r] = int(votes.argmax())
+    return classes, exit_stage, trees_evaluated
+
+
 def forest_eval_ref(
     records: jax.Array,    # (M, A)
     attr_idx: jax.Array,   # (T, N)

@@ -1,4 +1,5 @@
 from repro.serve.engine import (
+    AnytimePolicy,
     BackgroundRetuner,
     EngineStats,
     ForestEngineStats,

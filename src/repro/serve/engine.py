@@ -228,6 +228,10 @@ class TreeRequest:
     records: np.ndarray                 # (m, A) float32
     out: Optional[np.ndarray] = None    # (m,) int32 once served
     done: bool = False
+    # anytime serving only: per-record answer confidence in [0, 1] — 1.0
+    # when the class is provably final, the partial-margin ratio when the
+    # latency SLO truncated the cascade before all trees voted
+    confidence: Optional[np.ndarray] = None
 
 
 def _next_wave(queue: deque, max_batch: int) -> tuple[list, int]:
@@ -333,6 +337,31 @@ class TreeServeEngine:
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class AnytimePolicy:
+    """Anytime serving: answer within an SLO by truncating cascade stages.
+
+    The engine evaluates each wave through an early-exit cascade
+    (:class:`repro.kernels.tree_eval.CascadeEvaluator`) with the SLO as the
+    per-wave deadline: stage 0 always runs, and each later stage runs only
+    if its predicted latency (per-stage EMA) fits the remaining budget.
+    Requests report per-record ``confidence`` — 1.0 where the class is
+    provably final, the partial-margin ratio where the deadline cut the
+    forest short.
+
+    Attributes:
+      slo_ms: per-wave latency budget in milliseconds.
+      stages: cascade stage count (more stages = finer truncation grain).
+      bound: early-exit bound; 1.0 keeps non-truncated answers exact.
+      calibration_sample: records from the first wave used to rank trees.
+    """
+
+    slo_ms: float
+    stages: int = 3
+    bound: float = 1.0
+    calibration_sample: int = 512
+
+
 @dataclasses.dataclass
 class ForestEngineStats:
     waves: int = 0
@@ -342,6 +371,9 @@ class ForestEngineStats:
     chunk_ms: list = dataclasses.field(default_factory=list)  # per-chunk latency
     retunes: int = 0               # background winner promotions completed
     bucket_waves: dict = dataclasses.field(default_factory=dict)  # key → waves served
+    anytime_waves: int = 0         # waves served through the anytime cascade
+    anytime_truncations: int = 0   # waves the SLO stopped before the last stage
+    anytime_stages: list = dataclasses.field(default_factory=list)  # stages run per wave
 
 
 class ForestServeEngine:
@@ -366,9 +398,12 @@ class ForestServeEngine:
     def __init__(self, forest, *, max_batch: int = 65536, chunk_records: int = 8192,
                  n_classes: Optional[int] = None, mesh=None, plan=None,
                  decomposition=None, cache=None, autotune: bool = False, engines=None,
-                 retune: RetunePolicy | None = RetunePolicy()):
+                 retune: RetunePolicy | None = RetunePolicy(),
+                 anytime: AnytimePolicy | None = None):
         from repro.dist import ShardedForestEvaluator, StreamingChunker
 
+        if anytime is not None and n_classes is None:
+            raise ValueError("anytime serving needs n_classes (it votes classes)")
         self._eval = ShardedForestEvaluator(
             forest, mesh=mesh, plan=plan, decomposition=decomposition,
             cache=cache, autotune=autotune, engines=engines,
@@ -377,6 +412,8 @@ class ForestServeEngine:
         self.forest = self._eval.forest
         self.max_batch = max_batch
         self.n_classes = n_classes
+        self.anytime = anytime
+        self._cascade = None   # built lazily: calibrated on the first wave
         self.stats = ForestEngineStats()
         self.retuner: BackgroundRetuner | None = None
         if retune is not None:
@@ -409,30 +446,72 @@ class ForestServeEngine:
             self._run_wave(*_next_wave(queue, self.max_batch))
         return requests
 
+    def _anytime_cascade(self, batch: np.ndarray):
+        """The wave cascade, built once and calibrated on the first wave."""
+        if self._cascade is None:
+            from repro.kernels.tree_eval import CascadeEvaluator
+
+            pol = self.anytime
+            self._cascade = CascadeEvaluator(
+                self.forest,
+                n_classes=self.n_classes,
+                bound=pol.bound,
+                stages=pol.stages,
+                calibration=batch[: pol.calibration_sample],
+            )
+        return self._cascade
+
     def _run_wave(self, wave: list[TreeRequest], total: int) -> None:
         self.stats.waves += 1
         self.stats.records += total
         batch = np.concatenate([r.records for r in wave], axis=0).astype(np.float32)
 
-        def on_chunk(latency_ms: float, n: int) -> None:
-            self.stats.chunks += 1
-            self.stats.chunk_ms.append(latency_ms)
-
-        t0 = time.perf_counter()
-        per_tree = self._chunker.eval(batch, on_chunk=on_chunk)   # (T, total)
-        if self.n_classes is not None:
-            from repro.core.forest import majority_vote
-
-            out = np.asarray(majority_vote(jnp.asarray(per_tree), self.n_classes))
+        if self.anytime is not None:
+            # anytime path: the cascade owns staging/early exit, so the wave
+            # bypasses the chunker — the SLO check needs whole-stage latencies
+            cascade = self._anytime_cascade(batch)
+            t0 = time.perf_counter()
+            res = cascade(batch, deadline_ms=self.anytime.slo_ms)
+            self.stats.eval_s += time.perf_counter() - t0
+            self.stats.anytime_waves += 1
+            self.stats.anytime_stages.append(res.stages_run)
+            # truncation = the deadline (not the exit bound) stopped the run:
+            # some record never cleared the bound yet has trees left unvoted
+            truncated = res.stages_run < cascade.plan.n_stages and bool(
+                np.any(
+                    (res.exit_stage < 0)
+                    & (res.trees_evaluated < cascade.plan.n_trees)
+                )
+            )
+            if truncated:
+                self.stats.anytime_truncations += 1
+            off = 0
+            for r in wave:
+                m = r.records.shape[0]
+                r.out = res.classes[off:off + m]
+                r.confidence = res.confidence[off:off + m]
+                r.done = True
+                off += m
         else:
-            out = per_tree
-        self.stats.eval_s += time.perf_counter() - t0
-        off = 0
-        for r in wave:
-            m = r.records.shape[0]
-            r.out = out[off:off + m] if self.n_classes is not None else out[:, off:off + m]
-            r.done = True
-            off += m
+            def on_chunk(latency_ms: float, n: int) -> None:
+                self.stats.chunks += 1
+                self.stats.chunk_ms.append(latency_ms)
+
+            t0 = time.perf_counter()
+            per_tree = self._chunker.eval(batch, on_chunk=on_chunk)   # (T, total)
+            if self.n_classes is not None:
+                from repro.core.forest import majority_vote
+
+                out = np.asarray(majority_vote(jnp.asarray(per_tree), self.n_classes))
+            else:
+                out = per_tree
+            self.stats.eval_s += time.perf_counter() - t0
+            off = 0
+            for r in wave:
+                m = r.records.shape[0]
+                r.out = out[off:off + m] if self.n_classes is not None else out[:, off:off + m]
+                r.done = True
+                off += m
         key = self._eval._forest_evaluator().shape_of(batch).key()
         self.stats.bucket_waves[key] = self.stats.bucket_waves.get(key, 0) + 1
         if self.retuner is not None:

@@ -50,17 +50,22 @@ from repro.tune.dispatch import (
     tuned_eval_forest,
 )
 from repro.tune.heuristic import (
+    cascade_heuristic_candidate,
+    default_survival,
     forest_heuristic_candidate,
     heuristic_candidate,
     measured_d_mu,
     measured_forest_d_mu,
+    measured_survival_rate,
     predicted_times,
 )
 from repro.tune.measure import (
     Measurement,
     measure_candidate,
+    measure_cascade_candidate,
     measure_forest_candidate,
     time_callable,
+    tune_cascade_workload,
     tune_forest_workload,
     tune_workload,
 )
@@ -69,6 +74,8 @@ from repro.tune.space import (
     ForestShape,
     WorkloadShape,
     backend_tag,
+    cascade_search_space,
+    cascade_stage_grid,
     forest_search_space,
     search_space,
 )
@@ -83,18 +90,25 @@ __all__ = [
     "TunedEvaluator",
     "WorkloadShape",
     "backend_tag",
+    "cascade_heuristic_candidate",
+    "cascade_search_space",
+    "cascade_stage_grid",
     "default_cache_path",
+    "default_survival",
     "forest_heuristic_candidate",
     "forest_search_space",
     "heuristic_candidate",
     "measure_candidate",
+    "measure_cascade_candidate",
     "measure_forest_candidate",
     "measured_d_mu",
     "measured_forest_d_mu",
+    "measured_survival_rate",
     "predicted_times",
     "registry_fingerprint",
     "search_space",
     "time_callable",
+    "tune_cascade_workload",
     "tune_forest_workload",
     "tune_workload",
     "tuned_eval",

@@ -29,7 +29,7 @@ from pathlib import Path
 from typing import Optional
 
 CACHE_ENV = "REPRO_TUNE_CACHE"
-CACHE_VERSION = 2  # v2: payload carries the variant-registry fingerprint
+CACHE_VERSION = 3  # v3: class-level (majority/cascade) winners join the table
 
 
 @functools.lru_cache(maxsize=1)
@@ -45,11 +45,16 @@ def registry_fingerprint() -> str:
 
     from repro.core import eval_dataparallel as _dp
     from repro.core import eval_speculative as _spec
+    from repro.kernels.tree_eval import cascade as _cascade
     from repro.kernels.tree_eval import kernel as _kernel
     from repro.kernels.tree_eval import ops as _ops
 
     h = hashlib.sha256()
-    registries = [("tree", _ops.VARIANTS), ("forest", _ops.FOREST_VARIANTS)]
+    registries = [
+        ("tree", _ops.VARIANTS),
+        ("forest", _ops.FOREST_VARIANTS),
+        ("cascade", _cascade.CASCADE_VARIANTS),
+    ]
     for tag, registry in registries:
         for name in sorted(registry):
             spec = registry[name]
@@ -58,13 +63,14 @@ def registry_fingerprint() -> str:
                 f"|{spec.algorithm}|{spec.engine}|{spec.jump_mode}|{spec.tunables}".encode()
             )
             h.update(f"|{getattr(spec, 'family', '')}".encode())
+            fn = getattr(spec, "fn", None) or getattr(spec, "build", None)
             try:
-                h.update(inspect.getsource(spec.fn).encode())
+                h.update(inspect.getsource(fn).encode())
             except (OSError, TypeError):
-                h.update(repr(spec.fn).encode())
+                h.update(repr(fn).encode())
     # the registered fns are thin wrappers: hash the modules the variants
     # actually lower through (Pallas kernels + the jnp evaluators)
-    for mod in (_ops, _kernel, _spec, _dp):
+    for mod in (_ops, _kernel, _cascade, _spec, _dp):
         try:
             h.update(inspect.getsource(mod).encode())
         except (OSError, TypeError):

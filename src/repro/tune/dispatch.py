@@ -30,6 +30,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.tree import EncodedTree, tree_depth
+from repro.kernels.tree_eval.cascade import (
+    CASCADE_VARIANTS,
+    MAJORITY_FAMILY,
+    get_cascade_variant,
+)
 from repro.kernels.tree_eval.ops import (
     FOREST_VARIANTS,
     PER_TREE_FAMILY,
@@ -40,12 +45,19 @@ from repro.kernels.tree_eval.ops import (
 )
 from repro.tune.cache import TuneCache, TuneEntry
 from repro.tune.heuristic import (
+    cascade_heuristic_candidate,
     forest_heuristic_candidate,
     heuristic_candidate,
     measured_d_mu,
     measured_forest_d_mu,
+    measured_survival_rate,
 )
-from repro.tune.measure import bucket_pad_records, tune_forest_workload, tune_workload
+from repro.tune.measure import (
+    bucket_pad_records,
+    tune_cascade_workload,
+    tune_forest_workload,
+    tune_workload,
+)
 from repro.tune.space import Candidate, ForestShape, WorkloadShape, backend_tag
 
 
@@ -402,6 +414,113 @@ class ForestTunedEvaluator:
             with self._swap_lock:
                 if gen == self._gen:   # don't cache a pre-swap resolution
                     self._fast[(m, a)] = run
+        return run(records)
+
+    # -- class-level dispatch (majority vote vs early-exit cascade) ---------
+
+    def resolve_classes(self, records, n_classes: int) -> tuple[Candidate, str]:
+        """Pick the class-level candidate for this batch.
+
+        Same resolution ladder as :meth:`resolve`, but over the *class*
+        question — "which class wins the vote?" — whose candidate set is
+        the full majority-vote path (``Candidate(MAJORITY_FAMILY)``) plus
+        the early-exit cascades.  Keys carry the class count
+        (:meth:`ForestShape.classes_key`), and the heuristic extends the
+        §3.6 model with a survival-rate term measured on this batch.  Every
+        candidate is exact at bound 1.0, so resolution never changes the
+        predicted classes.
+        """
+        shape = self.shape_of(records)
+        backend = backend_tag()
+        key = shape.classes_key(n_classes, backend)
+        hit = self._resolved.get(key)
+        if hit is not None:
+            return hit[0], "memo"
+
+        entry = self.cache.lookup(key)
+        source = "cache"
+        if entry is not None and (
+            entry.variant == MAJORITY_FAMILY or entry.variant in CASCADE_VARIANTS
+        ):
+            cand = Candidate.make(entry.variant, **entry.params)
+        elif self.autotune:
+            entry, _ = tune_cascade_workload(
+                records,
+                self.forest,
+                n_classes,
+                cache=self.cache,
+                engines=self.engines,
+                backend=backend,
+                **self.measure_kw,
+            )
+            cand = Candidate.make(entry.variant, **entry.params)
+            source = "autotune"
+        else:
+            kw = dict(self.heuristic_kw)
+            if self.measure_d_mu and "d_mu" not in kw:
+                kw["d_mu"] = measured_forest_d_mu(
+                    self.forest, records, sample=self.d_mu_sample
+                )
+            survival = kw.pop("survival", None)
+            if survival is None:
+                survival = measured_survival_rate(
+                    self.forest, records, n_classes, sample=self.d_mu_sample
+                )
+            cand = cascade_heuristic_candidate(
+                shape, n_classes, survival=survival, engines=self.engines, **kw
+            )
+            source = "heuristic"
+        with self._swap_lock:
+            resolved = self._resolved.setdefault(key, (cand, source))
+        return resolved[0], source
+
+    def _class_runner(self, cand: Candidate, n_classes: int, records):
+        """Build the steady-state classes callable for one resolution."""
+        from repro.core.forest import majority_vote  # local: core ↔ tune layering
+
+        if cand.variant == MAJORITY_FAMILY:
+            return lambda rec: majority_vote(self(rec), n_classes)
+        import numpy as np
+
+        spec = get_cascade_variant(cand.variant)
+        params = cand.param_dict
+        # the evaluator is stateful (packed stage tables, latency EMAs):
+        # build once per resolved bucket, calibrate the plan on this batch
+        ev = spec.build(
+            self.forest,
+            n_classes=n_classes,
+            stages=int(params.get("stages", 2)),
+            bound=1.0,
+            block_m=params.get("block_m"),
+            calibration=records,
+        )
+
+        def run(rec):
+            return jnp.asarray(ev(np.asarray(rec)).classes)
+
+        run.cascade = ev  # exposed for introspection / serve-engine stats
+        return run
+
+    def predict(self, records, n_classes: int) -> jax.Array:
+        """Majority-vote classes, shape (M,) int32, via class-level dispatch.
+
+        Either the full forest path (``majority_vote`` over
+        :meth:`__call__`) or a calibrated early-exit cascade — whichever the
+        resolution picked.  Both are exact, so the output always equals
+        ``majority_vote(self(records), n_classes)``.
+        """
+        if not (isinstance(records, jax.Array) and records.dtype == jnp.float32):
+            records = jnp.asarray(records, jnp.float32)
+        m, a = records.shape
+        key = ("cls", m, a, int(n_classes))
+        run = self._fast.get(key)
+        if run is None:
+            gen = self._gen
+            cand, _ = self.resolve_classes(records, n_classes)
+            run = self._class_runner(cand, n_classes, records)
+            with self._swap_lock:
+                if gen == self._gen:   # don't cache a pre-swap resolution
+                    self._fast[key] = run
         return run(records)
 
 

@@ -18,12 +18,14 @@ pick engine/jump-mode (Pallas + one-hot MXU on TPU, XLA gather elsewhere).
 from __future__ import annotations
 
 from repro.core.analysis import CostModel, t3_data_parallel, t5_speculative
+from repro.kernels.tree_eval.cascade import MAJORITY_FAMILY, plan_cascade
 from repro.kernels.tree_eval.ops import PER_TREE_FAMILY, choose_block_m, on_tpu
 from repro.tune.space import (
     MAX_ONEHOT_NODES,
     Candidate,
     ForestShape,
     WorkloadShape,
+    cascade_stage_grid,
     default_engines,
 )
 
@@ -258,3 +260,153 @@ def forest_heuristic_candidate(
         # paper: 2 jumps per synchronisation round was the measured optimum
         return Candidate.make(name, jumps_per_round=2)
     return Candidate.make(name)
+
+
+# ---------------------------------------------------------------------------
+# Class-level heuristic: full majority vote vs early-exit cascade
+# ---------------------------------------------------------------------------
+
+
+def measured_survival_rate(
+    forest,
+    records,
+    n_classes: int,
+    *,
+    plan=None,
+    stages: int = 2,
+    bound: float = 1.0,
+    sample: int = 256,
+) -> tuple[float, ...]:
+    """Fraction of records entering each cascade stage, measured on a sample.
+
+    Simulates the exit rule on the reference per-tree classes (host numpy,
+    no kernels): accumulate votes stage by stage in the plan's tree order
+    and retire records whose margin exceeds ``bound`` times the remaining
+    tree count.  Element 0 is always 1.0; the tail elements are the
+    survival-rate term the §3.6-style cascade model multiplies stage costs
+    by.
+    """
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    from repro.kernels.tree_eval.ref import forest_eval_ref
+
+    rec = np.asarray(records, np.float32)[: max(1, int(sample))]
+    if plan is None:
+        plan = plan_cascade(forest, rec, n_classes=n_classes, stages=stages, bound=bound)
+    per_tree = np.asarray(
+        forest_eval_ref(
+            jnp.asarray(rec),
+            jnp.asarray(forest.attr_idx, jnp.int32),
+            jnp.asarray(forest.threshold, jnp.float32),
+            jnp.asarray(forest.child, jnp.int32),
+            jnp.asarray(forest.class_val, jnp.int32),
+            max_depth=int(forest.max_depth),
+        )
+    )
+    m = rec.shape[0]
+    t_total = plan.n_trees
+    c = max(int(n_classes), int(per_tree.max(initial=0)) + 1, 2)
+    votes = np.zeros((m, c), np.int32)
+    alive = np.ones((m,), bool)
+    out: list[float] = []
+    done = 0
+    for size in plan.stage_sizes:
+        out.append(float(alive.mean()) if m else 0.0)
+        for j in range(done, done + size):
+            votes[np.arange(m), per_tree[plan.order[j]]] += 1
+        done += size
+        remaining = t_total - done
+        if remaining > 0:
+            top2 = np.partition(votes, -2, axis=1)[:, -2:]
+            margin = top2[:, 1] - top2[:, 0]
+            alive &= ~(margin > bound * remaining)
+    return tuple(out)
+
+
+def default_survival(n_stages: int) -> tuple[float, ...]:
+    """Survival prior when no calibration batch is available.
+
+    Everyone enters stage 0; each later stage keeps roughly half its
+    predecessor's records — a deliberately conservative prior (measured
+    easy-mix survivals are far lower) so the heuristic only picks a cascade
+    when it wins even on middling workloads.
+    """
+    return tuple(min(1.0, 0.5**s) for s in range(max(1, int(n_stages))))
+
+
+def cascade_heuristic_candidate(
+    shape: ForestShape,
+    n_classes: int,
+    *,
+    survival: tuple[float, ...] | None = None,
+    cm: CostModel = CostModel(),
+    d_mu: float | None = None,
+    p_group: float | None = None,
+    engines: tuple[str, ...] | None = None,
+    launch_overhead: float = FOREST_LAUNCH_OVERHEAD,
+) -> Candidate:
+    """Model-based class-level choice: majority vote vs early-exit cascade.
+
+    Extends the §3.6 forest model by the survival-rate term.  With t(d) the
+    per-tree winner's model time, surv_s the fraction of records entering
+    stage s and size_s the stage's tree count:
+
+        full     ≈ T · t(d)                     + γ
+        cascade  ≈ Σ_s size_s · surv_s · t(d)   + S · γ
+
+    Each stage pays its launch overhead γ in full (the compacted tile still
+    launches) but only its survivors' share of the compute.  The best stage
+    count from :func:`cascade_stage_grid` competes against the full path;
+    ties go to the full path (simpler, no compaction machinery).
+
+    Args:
+      survival: per-stage entering fractions from
+        :func:`measured_survival_rate`; longer/shorter tuples than a
+        candidate's stage count are resampled from the tail prior.  Default
+        = :func:`default_survival`.
+    """
+    engines = default_engines() if engines is None else tuple(engines)
+    deep = shape.tree_shape()
+    t_tree = min(predicted_times(deep, cm=cm, d_mu=d_mu, p_group=p_group).values())
+    full_cost = shape.t * t_tree + launch_overhead
+
+    grid = cascade_stage_grid(shape)
+    best: tuple[float, int] | None = None
+    for s in grid:
+        plan = plan_cascade(_ShapeForest(shape), n_classes=n_classes, stages=s, bound=1.0)
+        surv = survival if survival is not None else default_survival(plan.n_stages)
+        cost = plan.n_stages * launch_overhead
+        for i, size in enumerate(plan.stage_sizes):
+            f = surv[i] if i < len(surv) else default_survival(i + 1)[-1]
+            cost += size * max(0.0, min(1.0, f)) * t_tree
+        if best is None or cost < best[0]:
+            best = (cost, s)
+
+    if best is None or best[0] >= full_cost:
+        return Candidate.make(MAJORITY_FAMILY)
+
+    stages = best[1]
+    engine = "pallas" if "pallas" in engines else "jnp"
+    times = predicted_times(deep, cm=cm, d_mu=d_mu, p_group=p_group)
+    algorithm = min(times, key=times.get)
+    onehot_ok = shape.n_nodes <= MAX_ONEHOT_NODES
+    family = "fused" if engine == "pallas" else "vmap"
+    if algorithm == "data_parallel":
+        name = f"forest_cascade_{family}_data_parallel"
+    else:
+        jump_mode = "onehot" if (engine == "pallas" and on_tpu() and onehot_ok) else "gather"
+        name = f"forest_cascade_{family}_speculative_{jump_mode}"
+    if engine == "pallas":
+        b = shape.bucket()
+        bm = choose_block_m(b.n_nodes, b.n_attrs, jump_mode="gather")
+        return Candidate.make(name, stages=stages, block_m=bm)
+    return Candidate.make(name, stages=stages)
+
+
+class _ShapeForest:
+    """Just enough forest surface for :func:`plan_cascade` stage sizing."""
+
+    def __init__(self, shape: ForestShape):
+        self.n_trees = int(shape.t)

@@ -15,6 +15,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.tree_eval.cascade import MAJORITY_FAMILY, get_cascade_variant
 from repro.kernels.tree_eval.ops import (
     PER_TREE_FAMILY,
     PackedForest,
@@ -27,6 +28,7 @@ from repro.tune.space import (
     ForestShape,
     WorkloadShape,
     backend_tag,
+    cascade_search_space,
     forest_search_space,
     search_space,
 )
@@ -353,4 +355,112 @@ def tune_forest_workload(
     )
     if cache is not None and store:
         cache.store(shape.key(backend), entry)
+    return entry, measurements
+
+
+# ---------------------------------------------------------------------------
+# Class-level (majority vs cascade) measurement
+# ---------------------------------------------------------------------------
+
+
+def measure_cascade_candidate(
+    candidate: Candidate,
+    records,
+    forest,
+    n_classes: int,
+    *,
+    cache: TuneCache | None = None,
+    engines: tuple[str, ...] | None = None,
+    warmup: int = 2,
+    iters: int = 5,
+) -> Measurement:
+    """Median wall time of one class-level candidate.
+
+    ``Candidate(MAJORITY_FAMILY)`` prices the full path — the forest-level
+    winner followed by ``majority_vote`` — through a warm
+    :class:`repro.tune.dispatch.ForestTunedEvaluator`; cascade candidates
+    price a warm :class:`CascadeEvaluator` built at bound 1.0 (the only
+    bound the tuner may enumerate: every timed candidate must be exact so
+    the class-level choice never changes results).  Cascade timings include
+    the host-side compaction loop — that *is* the candidate's cost.
+    """
+    import numpy as np
+
+    from repro.core.forest import majority_vote
+
+    try:
+        if candidate.variant == MAJORITY_FAMILY:
+            from repro.tune.dispatch import ForestTunedEvaluator  # local: avoid cycle
+
+            fte = ForestTunedEvaluator(forest, cache=cache, engines=engines)
+            run = lambda: majority_vote(fte(records), n_classes)  # noqa: E731
+        else:
+            spec = get_cascade_variant(candidate.variant)
+            params = candidate.param_dict
+            ev = spec.build(
+                forest,
+                n_classes=n_classes,
+                stages=int(params.get("stages", 2)),
+                bound=1.0,
+                block_m=params.get("block_m"),
+                calibration=records,
+            )
+            rec_np = np.asarray(records, np.float32)
+            run = lambda: ev(rec_np).classes  # noqa: E731
+        samples = time_callable(run, warmup=warmup, iters=iters)
+    except Exception:
+        return Measurement(candidate, float("inf"), ())
+    return Measurement(candidate, _median(samples), samples)
+
+
+def tune_cascade_workload(
+    records,
+    forest,
+    n_classes: int,
+    *,
+    cache: TuneCache | None = None,
+    engines: tuple[str, ...] | None = None,
+    warmup: int = 2,
+    iters: int = 5,
+    backend: str | None = None,
+    verbose: bool = False,
+    store: bool = True,
+) -> tuple[TuneEntry, list[Measurement]]:
+    """Time every class-level candidate and record the winner.
+
+    The class-level analogue of :func:`tune_forest_workload`: the full
+    majority-vote path competes against every registered cascade variant
+    crossed with the stage grid (see
+    :func:`repro.tune.space.cascade_search_space`).  Early-exit fractions —
+    and therefore cascade timings — depend on the *actual* record mix, so
+    candidates are timed on the un-bucketed batch and the winner is stored
+    under the bucketed :meth:`ForestShape.classes_key`.
+    """
+    backend = backend or backend_tag()
+    rec = jnp.asarray(records, jnp.float32)
+    shape = ForestShape.of(rec, forest)
+
+    measurements = [
+        measure_cascade_candidate(
+            c, rec, forest, n_classes,
+            cache=cache, engines=engines, warmup=warmup, iters=iters,
+        )
+        for c in cascade_search_space(shape, n_classes, engines=engines)
+    ]
+    ok = [m for m in measurements if not m.failed]
+    if not ok:
+        raise RuntimeError(f"no class-level candidate succeeded for shape {shape}")
+    best = min(ok, key=lambda m: m.median_ms)
+    if verbose:
+        for m in sorted(ok, key=lambda m: m.median_ms):
+            print(f"  {m.median_ms:10.3f} ms  {m.candidate.variant} {m.candidate.param_dict}")
+    entry = TuneEntry(
+        variant=best.candidate.variant,
+        params=best.candidate.param_dict,
+        median_ms=best.median_ms,
+        shape=dataclasses.asdict(shape),
+        backend=backend,
+    )
+    if cache is not None and store:
+        cache.store(shape.classes_key(n_classes, backend), entry)
     return entry, measurements

@@ -29,6 +29,11 @@ from typing import Iterator
 
 import jax
 
+from repro.kernels.tree_eval.cascade import (
+    MAJORITY_FAMILY,
+    exit_enabling_prefix,
+    list_cascade_variants,
+)
 from repro.kernels.tree_eval.ops import (
     LANE,
     PER_TREE_FAMILY,
@@ -243,6 +248,16 @@ class ForestShape:
             m=self.m, n_nodes=self.n_nodes, n_attrs=self.n_attrs, depth=self.depth_max
         )
 
+    def classes_key(self, n_classes: int, backend: str | None = None) -> str:
+        """Cache key for the *class-level* (majority/cascade) bucket.
+
+        Class-level winners answer a different question than forest winners
+        — "what classes?" rather than "what per-tree matrix?" — and the
+        candidate set depends on C (the vote tally width), so the key is the
+        forest key suffixed with the class count.
+        """
+        return f"{self.key(backend)}|C{int(n_classes)}"
+
     @classmethod
     def of(
         cls,
@@ -323,3 +338,61 @@ def forest_search_space(
                 yield Candidate.make(spec.name, jumps_per_round=j)
         else:
             yield Candidate.make(spec.name)
+
+
+# ---------------------------------------------------------------------------
+# Class-level (majority / cascade) candidates
+# ---------------------------------------------------------------------------
+
+
+def cascade_stage_grid(shape: ForestShape) -> list[int]:
+    """Stage counts worth timing for a ``shape.t``-tree forest.
+
+    A cascade needs the exit-enabling first stage (``k_min`` trees at
+    bound 1.0) *plus* at least one later stage the exits can skip, so
+    forests with fewer than 3 trees admit no useful cascade.  The later
+    stages partition the ``t - k_min`` remaining trees; stage counts whose
+    tail stages would be empty are dropped.
+    """
+    t = int(shape.t)
+    if t < 3:
+        return []
+    k_min = exit_enabling_prefix(t, 1.0)
+    rest = t - k_min
+    if rest < 1:
+        return []
+    return [s for s in (2, 3, 4) if s - 1 <= rest]
+
+
+def cascade_search_space(
+    shape: ForestShape,
+    n_classes: int,
+    *,
+    engines: tuple[str, ...] | None = None,
+) -> Iterator[Candidate]:
+    """Enumerate class-level candidates: full majority vote vs cascades.
+
+    The baseline sentinel ``Candidate(MAJORITY_FAMILY)`` routes through the
+    forest-level winner (all T trees) followed by ``majority_vote``; the
+    cascade candidates cross each registered cascade variant with the stage
+    grid (× the block-size grid for the pallas engine).  Every candidate is
+    exact at bound 1.0, so the class-level choice never changes results.
+    """
+    del n_classes  # shapes the tally width, not the candidate set (kept for keying)
+    engines = default_engines() if engines is None else tuple(engines)
+    yield Candidate.make(MAJORITY_FAMILY)
+    stage_grid = cascade_stage_grid(shape)
+    if not stage_grid:
+        return
+    tshape = shape.tree_shape()
+    for spec in list_cascade_variants():
+        if spec.engine not in engines:
+            continue
+        if spec.jump_mode == "onehot" and shape.n_nodes > MAX_ONEHOT_NODES:
+            continue
+        for s in stage_grid:
+            if "block_m" in spec.tunables:
+                for bm in _block_m_grid(tshape, spec.jump_mode):
+                    yield Candidate.make(spec.name, stages=s, block_m=bm)
+            else:
+                yield Candidate.make(spec.name, stages=s)
