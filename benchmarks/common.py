@@ -105,6 +105,32 @@ def bench_json_path(name: str) -> Path:
     return root / f"BENCH_{name}.json"
 
 
+def env_header() -> dict:
+    """The environment stamp every committed BENCH_*.json carries.
+
+    A number without its environment is unreproducible: the same bench
+    differs by orders of magnitude between a TPU run and interpret-mode
+    Pallas on CPU.  This header makes each artifact self-describing —
+    rendered by ``results/make_table.py`` above every table.
+    """
+    import platform
+
+    from repro.kernels.tree_eval import ops as _ops
+
+    dev = jax.devices()[0]
+    return {
+        "env": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_kind": getattr(dev, "device_kind", str(dev)),
+            "device_count": jax.device_count(),
+            "pallas_interpret": not _ops.on_tpu(),
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+        }
+    }
+
+
 def write_bench_json(name: str, entries: list[dict], **header) -> Path:
     path = bench_json_path(name)
     path.parent.mkdir(parents=True, exist_ok=True)
@@ -112,6 +138,7 @@ def write_bench_json(name: str, entries: list[dict], **header) -> Path:
         "bench": name,
         "backend": jax.default_backend(),
         "jax": jax.__version__,
+        **env_header(),
         **header,
         "entries": entries,
     }

@@ -1,0 +1,122 @@
+"""Observability overhead: the serve path with obs disabled vs enabled.
+
+The repro.obs contract is "near-zero cost when disabled, cheap when on":
+every instrument mutation behind one enabled-flag branch, spans behind a
+shared no-op context manager.  This bench prices the contract on the real
+serve path — a :class:`repro.serve.ForestServeEngine` pushing record waves
+through the streaming chunker and the sharded executor — in three modes:
+
+* ``obs_off``      — ``Registry(enabled=False)`` + the null tracer (every
+  call site still runs, the branches just fall through);
+* ``obs_metrics``  — registry enabled, tracing off (the steady-state
+  production setting);
+* ``obs_full``     — registry + span tracer enabled (the debugging setting).
+
+Acceptance: ``obs_metrics`` wall-clock within 2% of ``obs_off`` (the
+number published in docs/observability.md).  Emits results/BENCH_obs.json.
+
+    PYTHONPATH=src python -m benchmarks.obs_overhead
+"""
+
+from __future__ import annotations
+
+N_TREES = 8
+N_CLASSES = 7
+WAVE_RECORDS = 2048
+REQUESTS = 8
+
+
+def _forest(seed: int = 0):
+    import numpy as np
+
+    from repro.core import CartConfig, EncodedForest, breadth_first_encode, train_cart
+    from repro.data.segmentation import make_segmentation
+
+    data = make_segmentation(seed)
+    rng = np.random.default_rng(seed)
+    trees = []
+    for _ in range(N_TREES):
+        idx = rng.integers(0, data.x_train.shape[0], data.x_train.shape[0])
+        root = train_cart(
+            data.x_train[idx], data.y_train[idx], N_CLASSES,
+            CartConfig(max_depth=8, min_samples_split=16, min_gain=4e-3),
+        )
+        trees.append(breadth_first_encode(root))
+    return EncodedForest(trees), data
+
+
+def _engine(forest, mode: str):
+    from repro import obs
+    from repro.serve import ForestServeEngine
+
+    if mode == "obs_off":
+        registry, tracer = obs.Registry(enabled=False), obs.NULL_TRACER
+    elif mode == "obs_metrics":
+        registry, tracer = obs.Registry(), obs.NULL_TRACER
+    elif mode == "obs_full":
+        registry, tracer = obs.Registry(), obs.Tracer()
+    else:
+        raise ValueError(mode)
+    # retune=None: a background measurement mid-iteration would dominate the
+    # timing and measure the tuner, not the observation cost
+    return ForestServeEngine(
+        forest, max_batch=WAVE_RECORDS, chunk_records=WAVE_RECORDS // 4,
+        n_classes=N_CLASSES, retune=None, registry=registry, tracer=tracer,
+    )
+
+
+def main(iters: int = 30, warmup: int = 5) -> dict:
+    import numpy as np
+
+    from benchmarks.common import time_fn, write_bench_json
+    from repro.serve import TreeRequest
+
+    forest, data = _forest()
+    rec = np.tile(data.x_test, (WAVE_RECORDS // data.x_test.shape[0] + 1, 1))
+    rec = rec[:WAVE_RECORDS].astype(np.float32)
+    print(f"forest: T={forest.n_trees} n_nodes={forest.n_nodes}; "
+          f"{REQUESTS} requests x {WAVE_RECORDS} records per pass")
+
+    medians: dict[str, float] = {}
+    entries: list[dict] = []
+    for mode in ("obs_off", "obs_metrics", "obs_full"):
+        eng = _engine(forest, mode)
+
+        def serve_pass():
+            reqs = [TreeRequest(uid=i, records=rec) for i in range(REQUESTS)]
+            eng.run(reqs)
+
+        t = time_fn(mode, serve_pass, iters=iters, warmup=warmup,
+                    mode=mode, requests=REQUESTS, wave_records=WAVE_RECORDS)
+        medians[mode] = t.median_us / 1e3
+        print(f"  {mode:12s} median {t.median_us / 1e3:9.3f} ms")
+        entries.append({
+            "name": mode,
+            "median_ms": t.median_us / 1e3,
+            "mean_ms": t.mean_us / 1e3,
+            "min_ms": t.min_us / 1e3,
+            "max_ms": t.max_us / 1e3,
+            "iters": t.n,
+        })
+
+    base = medians["obs_off"]
+    overhead = {
+        m: (medians[m] - base) / base * 100.0
+        for m in ("obs_metrics", "obs_full")
+    }
+    for m, pct in overhead.items():
+        print(f"  {m:12s} overhead {pct:+6.2f}% vs obs_off")
+    summary = {
+        "baseline_ms": base,
+        "metrics_overhead_pct": overhead["obs_metrics"],
+        "full_overhead_pct": overhead["obs_full"],
+        "target_pct": 2.0,
+        "metrics_within_target": overhead["obs_metrics"] <= 2.0,
+    }
+    path = write_bench_json("obs", entries, summary=summary)
+    print(f"wrote {path}")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,7 @@ import time
 
 
 BENCHES = ["table1", "fig4", "analysis", "m_sweep", "geometry", "moe_router", "tune",
-           "cascade", "dist_sweep"]
+           "cascade", "dist_sweep", "obs"]
 
 
 def _run(name: str) -> None:
@@ -51,10 +51,13 @@ def _run(name: str) -> None:
     elif name == "dist_sweep":
         from benchmarks.dist_sweep import main
         main()
+    elif name == "obs":
+        from benchmarks.obs_overhead import main
+        main()
     else:
         raise SystemExit(f"unknown bench {name!r}; available: {BENCHES}")
     entries = common.drain_records()
-    if entries and name not in ("tune", "cascade", "dist_sweep"):  # richer reports
+    if entries and name not in ("tune", "cascade", "dist_sweep", "obs"):  # richer reports
         path = common.write_bench_json(name, entries)
         print(f"--- wrote {path}")
     print(f"--- {name} done in {time.perf_counter() - t0:.1f}s")

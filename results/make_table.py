@@ -71,9 +71,24 @@ def _ms(x) -> str:
     return f"{x:.3f}"
 
 
+def _env_note(data: dict) -> list[str]:
+    """Render the ``env`` header benchmarks/common.py stamps into each JSON."""
+    env = data.get("env")
+    if not env:
+        return []
+    mode = "interpret" if env.get("pallas_interpret") else "compiled"
+    return [
+        f"*Environment: jax {env.get('jax', '?')} on `{env.get('backend', '?')}` "
+        f"({env.get('device_kind', '?')} ×{env.get('device_count', '?')}, "
+        f"pallas {mode}), python {env.get('python', '?')}.*",
+        "",
+    ]
+
+
 def render_tree_eval(data: dict) -> str:
     """BENCH_tree_eval.json → tuned-dispatch report (tree + forest levels)."""
     out = ["## Tree-eval autotuning (`BENCH_tree_eval.json`)", ""]
+    out.extend(_env_note(data))
     out.append(f"Backend `{data.get('backend', '?')}`, jax {data.get('jax', '?')}, "
                f"{data.get('cache_entries', '?')} cache entries after the sweep.")
     out.append("")
@@ -133,6 +148,7 @@ def render_tree_eval(data: dict) -> str:
 def render_dist(data: dict) -> str:
     """BENCH_dist.json → plan-predicted vs measured decomposition report."""
     out = ["## Sharded-forest decomposition sweep (`BENCH_dist.json`)", ""]
+    out.extend(_env_note(data))
     out.append(f"Backend `{data.get('backend', '?')}`, jax {data.get('jax', '?')}, "
                f"{data.get('n_devices', '?')} forced host devices; "
                f"mesh shapes {data.get('mesh_shapes', '?')}.  Predicted costs are "
@@ -200,6 +216,7 @@ def render_dist(data: dict) -> str:
 def render_cascade(data: dict) -> str:
     """BENCH_cascade.json → early-exit cascade accuracy/latency report."""
     out = ["## Early-exit cascade sweep (`BENCH_cascade.json`)", ""]
+    out.extend(_env_note(data))
     out.append(f"Backend `{data.get('backend', '?')}`, jax {data.get('jax', '?')}: "
                f"{data.get('n_trees', '?')}-tree bagged CART forest, "
                f"{data.get('n_classes', '?')} classes, M={data.get('m', '?')} per mix.  "
@@ -236,10 +253,41 @@ def render_cascade(data: dict) -> str:
     return "\n".join(out)
 
 
+def render_obs(data: dict) -> str:
+    """BENCH_obs.json → observability overhead report (disabled vs enabled)."""
+    out = ["## Observability overhead (`BENCH_obs.json`)", ""]
+    out.extend(_env_note(data))
+    out.append("The serve path (`ForestServeEngine`, streaming chunker + sharded "
+               "executor) timed with obs disabled (`Registry(enabled=False)` + "
+               "null tracer), metrics only, and metrics + span tracing.  "
+               "Acceptance: metrics-enabled within 2% of disabled.")
+    out.append("")
+    out.append("| mode | median ms | mean ms | min ms | max ms |")
+    out.append("|" + "---|" * 5)
+    for e in data.get("entries", []):
+        out.append(
+            f"| {e['name']} | {_ms(e['median_ms'])} | {_ms(e['mean_ms'])} "
+            f"| {_ms(e['min_ms'])} | {_ms(e['max_ms'])} |"
+        )
+    s = data.get("summary", {})
+    if s:
+        out.append("")
+        out.append(
+            f"Metrics overhead **{s.get('metrics_overhead_pct', 0):+.2f}%**, "
+            f"full tracing {s.get('full_overhead_pct', 0):+.2f}% vs disabled "
+            f"(target ≤{s.get('target_pct', 2.0):.0f}%: "
+            f"{'met' if s.get('metrics_within_target') else 'NOT MET'}).  "
+            "Negative overheads are run-to-run variance — the instrumented "
+            "path measured no slower than the disabled one."
+        )
+    return "\n".join(out)
+
+
 _RENDERERS = {
     "BENCH_tree_eval.json": render_tree_eval,
     "BENCH_cascade.json": render_cascade,
     "BENCH_dist.json": render_dist,
+    "BENCH_obs.json": render_obs,
 }
 
 

@@ -29,7 +29,6 @@ the path at all).
 
 from __future__ import annotations
 
-import dataclasses
 import threading
 from functools import partial
 
@@ -38,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.core.eval_dataparallel import eval_data_parallel
 from repro.core.eval_speculative import eval_speculative
 from repro.core.forest import EncodedForest
@@ -48,11 +48,36 @@ from repro.parallel.sharding import SHARD_MAP_KW as _SMAP_KW
 from repro.parallel.sharding import shard_map as _shard_map
 
 
-@dataclasses.dataclass
 class DistStats:
-    calls: int = 0
-    records: int = 0
-    resolve_source: str = ""    # where the shard kernel came from (tune provenance)
+    """Executor accounting on a :class:`repro.obs.Registry`.
+
+    ``resolve_source`` stays a plain last-write attribute (tests assert on
+    the latest provenance); each resolution also lands in the labelled
+    ``dist.resolutions{source=...}`` counter so a snapshot shows the full
+    cache-hit/heuristic mix, not just the most recent outcome.
+    """
+
+    def __init__(self, registry: obs.Registry | None = None):
+        self.registry = registry if registry is not None else obs.Registry()
+        r = self.registry
+        self.m_calls = r.counter("dist.calls", "executor dispatches")
+        self.m_records = r.counter("dist.records", "records dispatched")
+        self.m_resolutions = r.counter(
+            "dist.resolutions", "shard-kernel resolutions by tune provenance",
+            ("source",))
+        self.resolve_source = ""    # where the shard kernel came from (tune provenance)
+
+    def note_resolution(self, source: str) -> None:
+        self.resolve_source = source
+        self.m_resolutions.labels(source=source).inc()
+
+    @property
+    def calls(self) -> int:
+        return int(self.m_calls.value)
+
+    @property
+    def records(self) -> int:
+        return int(self.m_records.value)
 
 
 class ShardedForestEvaluator:
@@ -78,6 +103,8 @@ class ShardedForestEvaluator:
         cache=None,
         autotune: bool = False,
         engines: tuple[str, ...] | None = None,
+        registry: obs.Registry | None = None,
+        tracer: obs.Tracer | None = None,
     ):
         from repro.tune import TuneCache
 
@@ -85,6 +112,8 @@ class ShardedForestEvaluator:
         self.cache = cache if cache is not None else TuneCache()  # one handle, one disk read
         self.autotune = autotune
         self.engines = engines
+        self.obs = registry if registry is not None else obs.Registry()
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
         self.mesh_cost = mesh_cost if mesh_cost is not None else MeshCostModel()
         self.decomposition = decomposition
         self._given_mesh = mesh
@@ -94,7 +123,7 @@ class ShardedForestEvaluator:
         self.mesh = None
         self.record_sharding = None   # set once planned; exposed for callers
         self.resolved = None          # (Candidate, source) provenance
-        self.stats = DistStats()
+        self.stats = DistStats(self.obs)
         self._fast: dict[int, tuple] = {}   # M → (fn, m_pad, t_pad, tree_args)
         self._forest_ev = None        # lazy ForestTunedEvaluator (single selection point)
         # swap generation: a _build() racing invalidate_resolution() must not
@@ -156,6 +185,8 @@ class ShardedForestEvaluator:
                 cache=self.cache,
                 autotune=self.autotune,
                 engines=self.engines,
+                registry=self.obs,
+                tracer=self.tracer,
             )
         return self._forest_ev
 
@@ -260,7 +291,7 @@ class ShardedForestEvaluator:
             spec = get_forest_variant(entry.variant)
             cand = Candidate.make(entry.variant, **entry.params)
             self.resolved = (cand, "cache")
-            self.stats.resolve_source = "cache"
+            self.stats.note_resolution("cache")
             if spec.algorithm == "data_parallel":
                 return partial(eval_data_parallel, max_depth=depth)
             return partial(
@@ -282,7 +313,7 @@ class ShardedForestEvaluator:
         ev.depth = depth
         cand, source = ev.resolve(sample)
         self.resolved = (cand, source)
-        self.stats.resolve_source = source
+        self.stats.note_resolution(source)
 
         spec = get_variant(cand.variant)
         params = cand.param_dict
@@ -376,8 +407,8 @@ class ShardedForestEvaluator:
             records = jnp.asarray(records, jnp.float32)
         self._prepare(records)
         m = records.shape[0]
-        self.stats.calls += 1
-        self.stats.records += int(m)
+        self.stats.m_calls.inc()
+        self.stats.m_records.inc(int(m))
 
         if self.plan.n_devices == 1:
             # single-device fallback: the plain forest-tuned path, no
@@ -385,16 +416,22 @@ class ShardedForestEvaluator:
             # internal memo makes steady-state calls (serve waves, stream
             # chunks) pure dict probes, and the fused stacked-kernel
             # candidate stays in play, same as eval_forest_tuned.
-            return self._forest_evaluator()(records)
+            with self.tracer.span("kernel.dispatch", cat="kernel",
+                                  records=int(m), devices=1):
+                return self._forest_evaluator()(records)
 
         fast = self._fast.get(m)
         if fast is None:
             gen = self._gen
-            fast = self._build(m, int(records.shape[1]), np.asarray(records))
+            with self.tracer.span("dist.build", cat="dist", records=int(m),
+                                  devices=self.plan.n_devices):
+                fast = self._build(m, int(records.shape[1]), np.asarray(records))
             with self._swap_lock:
                 if gen == self._gen:   # don't cache a pre-swap resolution
                     self._fast[m] = fast
         fn, _m_pad, _t_pad, tree_args = fast
         # fn pads, reshards, evaluates and slices in one program — one
         # asynchronous dispatch per call, whatever sharding the input has
-        return fn(records, *tree_args)   # (n_trees, m)
+        with self.tracer.span("kernel.dispatch", cat="kernel", records=int(m),
+                              devices=self.plan.n_devices):
+            return fn(records, *tree_args)   # (n_trees, m)

@@ -32,7 +32,6 @@ exactly the chunk geometry they asked for.
 
 from __future__ import annotations
 
-import dataclasses
 import time
 from collections import deque
 
@@ -40,17 +39,58 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 
-@dataclasses.dataclass
+
 class StreamStats:
-    chunks: int = 0
-    records: int = 0
-    wall_s: float = 0.0                 # submit-first → drain-last, per eval()
-    chunk_ms: list = dataclasses.field(default_factory=list)  # submit→ready per chunk
-    # fraction of each chunk's submit→ready window shared with the previous
-    # in-flight chunk (0.0 for the first chunk of an eval)
-    overlap_ratio: list = dataclasses.field(default_factory=list)
-    coalesced_chunk_records: int = 0    # effective chunk size after adaptation
+    """Chunker accounting on a :class:`repro.obs.Registry`.
+
+    The pre-obs dataclass fields survive: scalars as read properties over
+    locked instruments, the per-chunk sequences (``chunk_ms``,
+    ``overlap_ratio``) as plain lists next to their histogram twins —
+    benches take medians over the lists, dashboards read the histograms.
+    """
+
+    def __init__(self, registry: obs.Registry | None = None):
+        self.registry = registry if registry is not None else obs.Registry()
+        r = self.registry
+        self.m_chunks = r.counter("stream.chunks", "chunks drained")
+        self.m_records = r.counter("stream.records", "records streamed")
+        self.m_wall_s = r.counter(
+            "stream.wall_s", "submit-first → drain-last seconds, per eval()")
+        self.m_chunk_ms = r.histogram(
+            "stream.chunk_ms", "submit→ready latency per chunk")
+        self.m_overlap = r.histogram(
+            "stream.overlap_ratio",
+            "fraction of each chunk's submit→ready window shared with the "
+            "previous in-flight chunk",
+            boundaries=obs.DEFAULT_RATIO_BOUNDARIES)
+        self.g_coalesced = r.gauge(
+            "stream.coalesced_chunk_records",
+            "effective chunk size after throughput-feedback adaptation")
+        self.m_coalesce = r.counter(
+            "stream.coalesce_decisions",
+            "throughput-feedback coalescing decisions", ("decision",))
+        self.chunk_ms: list = []        # submit→ready per chunk
+        # fraction of each chunk's submit→ready window shared with the
+        # previous in-flight chunk (0.0 for the first chunk of an eval)
+        self.overlap_ratio: list = []
+
+    @property
+    def chunks(self) -> int:
+        return int(self.m_chunks.value)
+
+    @property
+    def records(self) -> int:
+        return int(self.m_records.value)
+
+    @property
+    def wall_s(self) -> float:
+        return self.m_wall_s.value
+
+    @property
+    def coalesced_chunk_records(self) -> int:
+        return int(self.g_coalesced.value)
 
 
 class StreamingChunker:
@@ -65,13 +105,16 @@ class StreamingChunker:
 
     def __init__(self, evaluator, *, chunk_records: int = 65536, inflight: int = 2,
                  stats: StreamStats | None = None, auto_coalesce: bool = True,
-                 max_coalesce: int = 8):
+                 max_coalesce: int = 8,
+                 registry: obs.Registry | None = None,
+                 tracer: obs.Tracer | None = None):
         if chunk_records < 1:
             raise ValueError("chunk_records must be >= 1")
         self.evaluator = evaluator
         self.chunk_records = chunk_records
         self.inflight = max(1, inflight)
-        self.stats = stats if stats is not None else StreamStats()
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+        self.stats = stats if stats is not None else StreamStats(registry)
         self.auto_coalesce = auto_coalesce
         self.max_coalesce = max(1, int(max_coalesce))
         self._effective = chunk_records      # current adapted chunk size
@@ -82,7 +125,8 @@ class StreamingChunker:
 
     def _drain_one(self, pending: deque, outs: list, on_chunk) -> None:
         out, t_submit, n = pending.popleft()
-        arr = np.asarray(jax.block_until_ready(out))
+        with self.tracer.span("stream.drain", cat="stream", records=n) as dspan:
+            arr = np.asarray(jax.block_until_ready(out))
         t_ready = time.perf_counter()
         latency_ms = (t_ready - t_submit) * 1e3
         window = max(t_ready - t_submit, 1e-9)
@@ -91,8 +135,11 @@ class StreamingChunker:
         else:
             overlap = min(max((self._prev_ready - t_submit) / window, 0.0), 1.0)
         self._prev_ready = t_ready
-        self.stats.chunks += 1
-        self.stats.records += n
+        dspan.set(chunk_ms=round(latency_ms, 3), overlap=round(overlap, 3))
+        self.stats.m_chunks.inc()
+        self.stats.m_records.inc(n)
+        self.stats.m_chunk_ms.observe(latency_ms)
+        self.stats.m_overlap.observe(overlap)
         self.stats.chunk_ms.append(latency_ms)
         self.stats.overlap_ratio.append(overlap)
         if on_chunk is not None:
@@ -108,7 +155,7 @@ class StreamingChunker:
             # the first eval at a new size pays jit compilation for the new
             # chunk shape; stay here one more eval and measure compile-free
             self._seen.add(size)
-            self.stats.coalesced_chunk_records = self._effective
+            self.stats.g_coalesced.set(self._effective)
             return
         tput = records / wall
         prev = self._tput.get(size)
@@ -116,12 +163,19 @@ class StreamingChunker:
         best = max(self._tput, key=self._tput.get)
         if best != size:
             self._effective = best       # the explored size lost; go back
+            decision = "retreat"
         else:
             cap = self.chunk_records * self.max_coalesce
             nxt = min(size * 2, cap)
             if n_chunks > 1 and nxt > size and nxt not in self._tput:
                 self._effective = nxt    # current best; explore one size up
-        self.stats.coalesced_chunk_records = self._effective
+                decision = "grow"
+            else:
+                decision = "hold"
+        self.stats.m_coalesce.labels(decision=decision).inc()
+        self.tracer.instant("stream.coalesce", cat="stream", decision=decision,
+                            size=size, effective=self._effective)
+        self.stats.g_coalesced.set(self._effective)
 
     def eval(self, records, *, on_chunk=None) -> np.ndarray:
         """Evaluate a (possibly huge) record batch; returns host (T, M).
@@ -139,23 +193,30 @@ class StreamingChunker:
         # sizes only apply once a baseline throughput has been measured
         size = self._effective if (self.auto_coalesce and self._evals > 0) else self.chunk_records
         n_chunks = 0
-        for start in range(0, m, size):
-            chunk = rec[start : start + size]
-            # the executor's fused program shards/pads the chunk as part of
-            # its single dispatch, so no explicit device_put hop is needed —
-            # the dispatch (and with it the transfer) is queued asynchronously
-            out = self.evaluator(jnp.asarray(chunk))
-            pending.append((out, time.perf_counter(), chunk.shape[0]))
-            n_chunks += 1
-            # submit-before-drain: the new chunk's dispatch is already queued
-            # when the host blocks on the oldest one, so device work never
-            # gaps on the drain; at most ``inflight`` stay pending after it
-            while len(pending) > self.inflight:
+        with self.tracer.span("stream.eval", cat="stream", records=m,
+                              chunk_records=size) as espan:
+            for start in range(0, m, size):
+                chunk = rec[start : start + size]
+                # the executor's fused program shards/pads the chunk as part
+                # of its single dispatch, so no explicit device_put hop is
+                # needed — the dispatch (and with it the transfer) is queued
+                # asynchronously
+                with self.tracer.span("stream.chunk.submit", cat="stream",
+                                      chunk=n_chunks, records=chunk.shape[0]):
+                    out = self.evaluator(jnp.asarray(chunk))
+                pending.append((out, time.perf_counter(), chunk.shape[0]))
+                n_chunks += 1
+                # submit-before-drain: the new chunk's dispatch is already
+                # queued when the host blocks on the oldest one, so device
+                # work never gaps on the drain; at most ``inflight`` stay
+                # pending after it
+                while len(pending) > self.inflight:
+                    self._drain_one(pending, outs, on_chunk)
+            while pending:
                 self._drain_one(pending, outs, on_chunk)
-        while pending:
-            self._drain_one(pending, outs, on_chunk)
+            espan.set(chunks=n_chunks)
         wall = time.perf_counter() - t0
-        self.stats.wall_s += wall
+        self.stats.m_wall_s.inc(wall)
         self._evals += 1
         self._note_eval(size, n_chunks, m, wall)
         if not outs:

@@ -40,8 +40,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels.tree_eval import ops as _ops
 from repro.kernels.tree_eval.ref import forest_eval_ref
+
+# Vote margins are integer counts bounded by the forest size; a coarse
+# power-of-two grid keeps the exit-margin histograms readable at any T.
+_MARGIN_BOUNDARIES = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0)
 
 # Family name the class-level tuner uses for the plain "evaluate everything,
 # then majority-vote" path (no early exit); defined next to the cascade
@@ -309,6 +314,8 @@ class CascadeEvaluator:
         stages: int = 2,
         calibration=None,
         interpret: bool | None = None,
+        registry: obs.Registry | None = None,
+        tracer: obs.Tracer | None = None,
     ):
         if bound is not None and float(bound) <= 0.0:
             raise ValueError(f"bound must be positive or None, got {bound}")
@@ -342,6 +349,20 @@ class CascadeEvaluator:
         # (stage, padded_rows) → EMA of observed stage latency, for the
         # anytime deadline check.
         self._stage_ms: dict[tuple[int, int], float] = {}
+        self.obs = registry if registry is not None else obs.Registry()
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+        r = self.obs
+        self.m_evals = r.counter("cascade.evals", "cascade evaluations")
+        self.m_records = r.counter("cascade.records", "records evaluated")
+        self.m_stage_ms = r.histogram(
+            "cascade.stage_ms", "per-stage kernel latency", ("stage",))
+        self.m_survival = r.histogram(
+            "cascade.stage_survival",
+            "fraction of the batch entering each stage", ("stage",),
+            boundaries=obs.DEFAULT_RATIO_BOUNDARIES)
+        self.m_exit_margin = r.histogram(
+            "cascade.exit_margin", "final top-1 minus top-2 vote margins",
+            boundaries=_MARGIN_BOUNDARIES)
 
     # -- stage construction -------------------------------------------------
 
@@ -402,8 +423,11 @@ class CascadeEvaluator:
                 [rec, np.zeros((rows - n, rec.shape[1]), rec.dtype)], axis=0
             )
         t0 = time.perf_counter()
-        votes = self._stages[s](rec)[:n]
+        with self.tracer.span("cascade.stage", cat="cascade", stage=s,
+                              survivors=n, rows=rows):
+            votes = self._stages[s](rec)[:n]
         ms = (time.perf_counter() - t0) * 1e3
+        self.m_stage_ms.labels(stage=s).observe(ms)
         key = (s, rows)
         prev = self._stage_ms.get(key)
         self._stage_ms[key] = ms if prev is None else 0.7 * prev + 0.3 * ms
@@ -433,33 +457,41 @@ class CascadeEvaluator:
         alive = np.arange(m)
         survivors: list[int] = []
         stages_run = 0
+        self.m_evals.inc()
+        self.m_records.inc(m)
+        espan = self.tracer.span("cascade.eval", cat="cascade", records=m,
+                                 deadline_ms=deadline_ms)
         t_start = time.perf_counter()
 
-        for s, size in enumerate(self.plan.stage_sizes):
-            if alive.size == 0:
-                break
-            if deadline_ms is not None and s > 0:
-                elapsed = (time.perf_counter() - t_start) * 1e3
-                if elapsed + self._stage_estimate_ms(s, alive.size) > deadline_ms:
+        with espan:
+            for s, size in enumerate(self.plan.stage_sizes):
+                if alive.size == 0:
                     break
-            survivors.append(int(alive.size))
-            stage_votes, _ = self._stage_votes(s, rec[alive])
-            votes[alive] += stage_votes
-            trees_evaluated[alive] += size
-            stages_run = s + 1
-            remaining = t_total - int(trees_evaluated[alive[0]]) if alive.size else 0
-            if self.bound is not None and remaining > 0:
-                va = votes[alive]
-                top2 = np.partition(va, -2, axis=1)[:, -2:]
-                margin = top2[:, 1] - top2[:, 0]
-                decided = margin > self.bound * remaining
-                if decided.any():
-                    exit_stage[alive[decided]] = s
-                    alive = alive[~decided]
+                if deadline_ms is not None and s > 0:
+                    elapsed = (time.perf_counter() - t_start) * 1e3
+                    if elapsed + self._stage_estimate_ms(s, alive.size) > deadline_ms:
+                        break
+                survivors.append(int(alive.size))
+                self.m_survival.labels(stage=s).observe(alive.size / max(m, 1))
+                stage_votes, _ = self._stage_votes(s, rec[alive])
+                votes[alive] += stage_votes
+                trees_evaluated[alive] += size
+                stages_run = s + 1
+                remaining = t_total - int(trees_evaluated[alive[0]]) if alive.size else 0
+                if self.bound is not None and remaining > 0:
+                    va = votes[alive]
+                    top2 = np.partition(va, -2, axis=1)[:, -2:]
+                    margin = top2[:, 1] - top2[:, 0]
+                    decided = margin > self.bound * remaining
+                    if decided.any():
+                        exit_stage[alive[decided]] = s
+                        alive = alive[~decided]
+            espan.set(stages_run=stages_run)
 
         classes = votes.argmax(axis=1).astype(np.int32)
         top2 = np.partition(votes, -2, axis=1)[:, -2:]
         margin = (top2[:, 1] - top2[:, 0]).astype(np.int32)
+        self.m_exit_margin.observe_many(margin)
         remaining_all = (t_total - trees_evaluated).astype(np.int32)
         with np.errstate(divide="ignore", invalid="ignore"):
             conf = np.where(
@@ -581,6 +613,8 @@ def _builder(engine: str, algorithm: str, jump_mode: str) -> Callable:
         block_m: int | None = None,
         calibration=None,
         interpret: bool | None = None,
+        registry: obs.Registry | None = None,
+        tracer: obs.Tracer | None = None,
     ) -> CascadeEvaluator:
         return CascadeEvaluator(
             forest,
@@ -594,6 +628,8 @@ def _builder(engine: str, algorithm: str, jump_mode: str) -> Callable:
             stages=stages,
             calibration=calibration,
             interpret=interpret,
+            registry=registry,
+            tracer=tracer,
         )
 
     return build

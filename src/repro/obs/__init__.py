@@ -1,0 +1,60 @@
+"""repro.obs — unified metrics, span tracing and kernel-profiling bridge.
+
+The telemetry substrate under the whole serving stack (serve engines, the
+autotuner, the dist executor + streaming chunker, the early-exit cascade):
+
+  metrics.py  thread-safe registry of counters / gauges / fixed-boundary
+              histograms with p50/p95/p99 derivation; labelled series;
+              near-zero-cost when disabled; duplicate-registration guard.
+  trace.py    ring-buffered span tracer (context-manager API, safe from
+              worker threads) with a Chrome/Perfetto trace-event exporter
+              and optional ``jax.profiler.TraceAnnotation`` bridging so
+              host spans line up with device profiles.
+  export.py   JSON snapshot + Prometheus text exposition, stdlib-only.
+  smoke.py    the CI ``obs`` job: serve a workload with tracing on, export
+              both formats, assert they parse and carry the core metrics.
+
+Wiring model: every engine/evaluator owns a private :class:`Registry` by
+default (so per-engine stats views stay exact and tests stay isolated) and
+accepts ``registry=`` / ``tracer=`` to share one — `ForestServeEngine`
+threads its registry and tracer through the chunker, the executor, the
+tuned evaluators and the cascade, which is what makes one wave's
+wave→chunk→kernel spans land in a single trace.  Cross-cutting counters
+from functional APIs default to :func:`default_registry`.
+
+See docs/observability.md for the metric catalog and span-naming
+convention.
+"""
+
+from repro.obs.export import prometheus_text, snapshot, write_json_snapshot
+from repro.obs.metrics import (
+    DEFAULT_MS_BOUNDARIES,
+    DEFAULT_RATIO_BOUNDARIES,
+    Counter,
+    DuplicateMetricError,
+    Gauge,
+    Histogram,
+    Registry,
+    default_registry,
+    set_default_registry,
+)
+from repro.obs.trace import NULL_TRACER, SpanEvent, Tracer, write_chrome_trace
+
+__all__ = [
+    "Counter",
+    "DEFAULT_MS_BOUNDARIES",
+    "DEFAULT_RATIO_BOUNDARIES",
+    "DuplicateMetricError",
+    "Gauge",
+    "Histogram",
+    "NULL_TRACER",
+    "Registry",
+    "SpanEvent",
+    "Tracer",
+    "default_registry",
+    "prometheus_text",
+    "set_default_registry",
+    "snapshot",
+    "write_chrome_trace",
+    "write_json_snapshot",
+]

@@ -1,0 +1,176 @@
+"""Observability smoke: a traced serve pass, exported and sanity-checked.
+
+The CI ``obs`` job runs this module end-to-end: build a small bagged
+forest, push a few record waves through a :class:`repro.serve.ForestServeEngine`
+with metrics + tracing enabled, export a Chrome/Perfetto trace and a
+Prometheus text snapshot, then assert that
+
+* the Chrome trace parses as JSON and contains nested ``serve.wave`` →
+  ``stream.eval`` → ``kernel.dispatch`` spans;
+* the Prometheus text parses line-by-line and names the core series
+  (wave latency, chunker throughput/overlap, tuner resolutions);
+* registering a conflicting duplicate metric raises
+  :class:`repro.obs.DuplicateMetricError`.
+
+Artifacts land in ``--out`` (default ``/tmp/repro_obs_smoke``) so the CI
+job can upload them.  Exit code 0 means every assertion passed.
+
+    PYTHONPATH=src python -m repro.obs.smoke [--out DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+N_TREES = 6
+N_CLASSES = 7
+WAVE_RECORDS = 512
+REQUESTS = 4
+
+# Series the serve path must populate for the snapshot to count as healthy.
+CORE_METRICS = (
+    "serve.waves",
+    "serve.records",
+    "serve.wave_ms",
+    "serve.queue_wait_ms",
+    "serve.pad_fraction",
+    "stream.chunks",
+    "stream.chunk_ms",
+    "stream.overlap_ratio",
+    "tune.resolutions",
+)
+
+# A wave span must (transitively) contain these children on the stream path.
+NESTED_SPANS = ("serve.wave", "stream.eval", "kernel.dispatch")
+
+
+def _forest(seed: int = 0):
+    import numpy as np
+
+    from repro.core import CartConfig, EncodedForest, breadth_first_encode, train_cart
+    from repro.data.segmentation import make_segmentation
+
+    data = make_segmentation(seed)
+    rng = np.random.default_rng(seed)
+    trees = []
+    for _ in range(N_TREES):
+        idx = rng.integers(0, data.x_train.shape[0], data.x_train.shape[0])
+        root = train_cart(
+            data.x_train[idx], data.y_train[idx], N_CLASSES,
+            CartConfig(max_depth=6, min_samples_split=16, min_gain=4e-3),
+        )
+        trees.append(breadth_first_encode(root))
+    return EncodedForest(trees), data
+
+
+def _serve_traced(registry, tracer):
+    import numpy as np
+
+    from repro.serve import ForestServeEngine, TreeRequest
+
+    forest, data = _forest()
+    rec = np.tile(data.x_test, (WAVE_RECORDS // data.x_test.shape[0] + 1, 1))
+    rec = rec[:WAVE_RECORDS].astype(np.float32)
+    eng = ForestServeEngine(
+        forest, max_batch=WAVE_RECORDS, chunk_records=WAVE_RECORDS // 4,
+        n_classes=N_CLASSES, retune=None, registry=registry, tracer=tracer,
+    )
+    reqs = [TreeRequest(uid=i, records=rec) for i in range(REQUESTS)]
+    out = eng.run(reqs)
+    assert len(out) == REQUESTS, f"served {len(out)}/{REQUESTS} requests"
+    return eng
+
+
+def check_chrome_trace(path: Path) -> None:
+    doc = json.loads(path.read_text())
+    events = doc["traceEvents"]
+    assert events, "empty traceEvents"
+    by_name: dict[str, list[dict]] = {}
+    for ev in events:
+        by_name.setdefault(ev.get("name", ""), []).append(ev)
+    for name in NESTED_SPANS:
+        assert name in by_name, f"missing span {name!r} in trace"
+    # nesting: some kernel.dispatch span must sit inside a stream.eval span
+    # which sits inside a serve.wave span (same thread, time containment).
+    def _contains(outer: dict, inner: dict) -> bool:
+        return (outer["tid"] == inner["tid"]
+                and outer["ts"] <= inner["ts"]
+                and inner["ts"] + inner.get("dur", 0) <= outer["ts"] + outer.get("dur", 0))
+
+    nested = any(
+        _contains(w, e) and _contains(e, k)
+        for w in by_name["serve.wave"]
+        for e in by_name["stream.eval"]
+        for k in by_name["kernel.dispatch"]
+    )
+    assert nested, "no serve.wave > stream.eval > kernel.dispatch nesting found"
+    print(f"chrome trace ok: {len(events)} events, nesting verified")
+
+
+def check_prometheus(path: Path) -> None:
+    text = path.read_text()
+    assert text.endswith("\n"), "prometheus text must end with a newline"
+    seen = set()
+    for line in text.splitlines():
+        if line.startswith("# HELP ") or line.startswith("# TYPE "):
+            seen.add(line.split()[2])
+            continue
+        assert line, "blank line in prometheus exposition"
+        name = line.split("{", 1)[0].split(" ", 1)[0]
+        sample = line.rsplit(" ", 1)
+        assert len(sample) == 2, f"malformed sample line: {line!r}"
+        float(sample[1])  # value must parse
+        seen.add(name.removesuffix("_bucket").removesuffix("_count")
+                 .removesuffix("_sum"))
+    # exposition names are the dotted originals with dots sanitised away
+    missing = [m for m in CORE_METRICS if m.replace(".", "_") not in seen]
+    assert not missing, f"core metrics absent from snapshot: {missing}"
+    print(f"prometheus text ok: {len(seen)} series, core metrics present")
+
+
+def check_duplicate_registration(registry) -> None:
+    from repro.obs import DuplicateMetricError
+
+    registry.counter("smoke.dup", "first registration")
+    try:
+        registry.gauge("smoke.dup", "conflicting kind")
+    except DuplicateMetricError:
+        print("duplicate registration raises: ok")
+        return
+    raise AssertionError("conflicting re-registration did not raise")
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="/tmp/repro_obs_smoke")
+    args = parser.parse_args(argv)
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    from repro import obs
+
+    registry, tracer = obs.Registry(), obs.Tracer()
+    eng = _serve_traced(registry, tracer)
+    print(f"served: {eng.stats.waves} waves, {eng.stats.records} records, "
+          f"{eng.stats.chunks} chunks")
+
+    trace_path = out / "trace.json"
+    tracer.write_chrome_trace(trace_path)
+    prom_path = out / "metrics.prom"
+    prom_path.write_text(obs.prometheus_text(registry))
+    snap_path = out / "snapshot.json"
+    obs.write_json_snapshot(registry, snap_path)
+
+    check_chrome_trace(trace_path)
+    check_prometheus(prom_path)
+    json.loads(snap_path.read_text())  # snapshot must round-trip
+    check_duplicate_registration(registry)
+    print(f"artifacts in {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,236 @@
+"""Span tracer: ring-buffered timed spans with a Chrome/Perfetto exporter.
+
+``Tracer.span("serve.wave", cat="serve", bucket=key)`` is a context manager
+that records one complete ("X") trace event — wall-clock start + duration,
+thread id, free-form args.  Events land in a bounded ring buffer (a
+``deque(maxlen=...)`` appended under a lock), so tracing from the request
+thread and the :class:`~repro.serve.engine.BackgroundRetuner` worker at
+once is safe and memory stays bounded no matter how long an engine serves.
+
+Nesting is positional: spans opened inside other spans on the same thread
+are contained in time, which is exactly how the Chrome trace-event format
+(and Perfetto's UI) reconstructs the stack — the exporter does not need
+explicit parent ids for the wave→chunk→kernel hierarchy to render nested.
+Cross-thread work (background re-tune measurements) shows up on its own
+track, named via thread-name metadata events.
+
+Span naming convention (see docs/observability.md): dotted lowercase
+``layer.operation[.phase]`` — e.g. ``serve.wave``, ``stream.chunk.submit``,
+``kernel.dispatch``, ``cascade.stage``, ``tune.measure`` — with the layer
+repeated in ``cat`` so Perfetto can filter by subsystem.
+
+Kernel bridging: with ``jax_annotations=True`` every span also enters a
+``jax.profiler.TraceAnnotation`` of the same name, so when the JAX/XLA
+profiler is active (``jax.profiler.trace``) the host-side spans line up
+with device timelines in the same TensorBoard/Perfetto view.  The bridge
+is optional and import-guarded — absent profiler support degrades to plain
+host spans.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from collections import deque
+from typing import NamedTuple, Optional
+
+__all__ = ["NULL_TRACER", "SpanEvent", "Tracer", "write_chrome_trace"]
+
+
+class SpanEvent(NamedTuple):
+    """One completed span (times in µs relative to the tracer's epoch)."""
+
+    name: str
+    cat: str
+    ts_us: float
+    dur_us: float
+    thread: int          # thread ident (raw)
+    thread_name: str
+    args: dict
+
+
+class _Span:
+    """Active span: context manager recording one SpanEvent on exit."""
+
+    __slots__ = ("_tracer", "_name", "_cat", "_args", "_t0", "_jax_cm")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str, args: dict):
+        self._tracer = tracer
+        self._name = name
+        self._cat = cat
+        self._args = args
+        self._t0 = 0.0
+        self._jax_cm = None
+
+    def set(self, **kw) -> None:
+        """Attach args discovered mid-span (chunk counts, winners, ...)."""
+        self._args.update(kw)
+
+    def __enter__(self) -> "_Span":
+        ann = self._tracer._annotation_cls
+        if ann is not None:
+            self._jax_cm = ann(self._name)
+            self._jax_cm.__enter__()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        t1 = time.perf_counter()
+        if self._jax_cm is not None:
+            self._jax_cm.__exit__(exc_type, exc, tb)
+        if exc_type is not None:
+            self._args.setdefault("error", exc_type.__name__)
+        self._tracer._record(self._name, self._cat, self._t0, t1, self._args)
+
+
+class _NullSpan:
+    """Shared no-op span: the disabled path allocates nothing per call."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        return None
+
+    def set(self, **kw) -> None:
+        return None
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Tracer:
+    """Bounded in-memory span recorder with Chrome trace-event export.
+
+    Args:
+      capacity: ring-buffer size in spans; the oldest spans fall off first
+        (steady-state serving keeps the most recent window).
+      enabled: a disabled tracer's :meth:`span` returns a shared no-op
+        context manager — one branch, zero allocation.
+      jax_annotations: additionally wrap every span in a
+        ``jax.profiler.TraceAnnotation`` so device profiles correlate.
+    """
+
+    def __init__(self, *, capacity: int = 65536, enabled: bool = True,
+                 jax_annotations: bool = False):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.enabled = bool(enabled)
+        self.capacity = int(capacity)
+        self._events: deque[SpanEvent] = deque(maxlen=self.capacity)
+        self._lock = threading.Lock()
+        self._epoch = time.perf_counter()
+        self._dropped = 0
+        self._annotation_cls = None
+        if jax_annotations:
+            try:
+                from jax.profiler import TraceAnnotation
+
+                self._annotation_cls = TraceAnnotation
+            except Exception:      # profiler unavailable: plain host spans
+                self._annotation_cls = None
+
+    # -- recording ----------------------------------------------------------
+
+    def span(self, name: str, *, cat: str = "repro", **args):
+        """A context manager timing one span; no-op when disabled."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, cat, args)
+
+    def instant(self, name: str, *, cat: str = "repro", **args) -> None:
+        """Record a zero-duration marker event (coalescing decisions, swaps)."""
+        if not self.enabled:
+            return
+        t = time.perf_counter()
+        self._record(name, cat, t, t, args)
+
+    def _record(self, name: str, cat: str, t0: float, t1: float, args: dict) -> None:
+        th = threading.current_thread()
+        ev = SpanEvent(
+            name=name,
+            cat=cat,
+            ts_us=(t0 - self._epoch) * 1e6,
+            dur_us=(t1 - t0) * 1e6,
+            thread=th.ident or 0,
+            thread_name=th.name,
+            args=args,
+        )
+        with self._lock:
+            if len(self._events) == self.capacity:
+                self._dropped += 1
+            self._events.append(ev)
+
+    # -- introspection / export ---------------------------------------------
+
+    def events(self) -> list[SpanEvent]:
+        """Snapshot of the ring buffer, oldest first."""
+        with self._lock:
+            return list(self._events)
+
+    @property
+    def dropped(self) -> int:
+        """Spans evicted by the ring bound since construction."""
+        with self._lock:
+            return self._dropped
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+            self._dropped = 0
+
+    def chrome_trace(self) -> dict:
+        """The Chrome trace-event JSON object (load in Perfetto / about:tracing).
+
+        Complete ("X") events carry µs timestamps relative to the tracer
+        epoch; per-thread metadata ("M") events name the tracks.  Args are
+        emitted as-is, so bucket keys, chunk sizes and winners are
+        inspectable per-span in the UI.
+        """
+        pid = os.getpid()
+        events = self.events()
+        tids: dict[int, str] = {}
+        out = []
+        for e in events:
+            tids.setdefault(e.thread, e.thread_name)
+            out.append({
+                "name": e.name,
+                "cat": e.cat,
+                "ph": "X",
+                "ts": round(e.ts_us, 3),
+                "dur": round(e.dur_us, 3),
+                "pid": pid,
+                "tid": e.thread,
+                "args": {k: _jsonable(v) for k, v in e.args.items()},
+            })
+        meta = [
+            {"name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+             "args": {"name": name}}
+            for tid, name in sorted(tids.items())
+        ]
+        return {"traceEvents": meta + out, "displayTimeUnit": "ms"}
+
+    def write_chrome_trace(self, path) -> None:
+        write_chrome_trace(self, path)
+
+
+def _jsonable(v):
+    """Span args must survive json.dump whatever the caller attached."""
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    return str(v)
+
+
+def write_chrome_trace(tracer: Tracer, path) -> None:
+    """Serialise ``tracer``'s ring buffer as Chrome trace-event JSON."""
+    with open(path, "w") as f:
+        json.dump(tracer.chrome_trace(), f)
+
+
+#: Shared disabled tracer: components default to this so tracing is strictly
+#: opt-in and the untraced hot path costs one branch per span site.
+NULL_TRACER = Tracer(capacity=1, enabled=False)

@@ -27,6 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
+# Histogram grid for anytime stage counts (cascades rarely exceed 8 stages).
+_STAGE_BOUNDARIES = tuple(float(i) for i in range(1, 9))
+
 
 @dataclasses.dataclass
 class Request:
@@ -37,27 +42,64 @@ class Request:
     done: bool = False
 
 
-@dataclasses.dataclass
 class EngineStats:
-    waves: int = 0
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    decode_steps: int = 0
-    idle_token_slots: int = 0     # finished-request slots still riding decode
+    """LM-engine counters on a locked :class:`repro.obs.Registry`.
+
+    The pre-obs dataclass fields survive as read properties, so callers and
+    tests keep working; mutations go through the registry's instruments
+    (``m_*`` handles), which makes every counter thread-safe and exportable
+    (JSON snapshot / Prometheus text, see :mod:`repro.obs.export`).
+    """
+
+    def __init__(self, registry: obs.Registry | None = None):
+        self.registry = registry if registry is not None else obs.Registry()
+        r = self.registry
+        self.m_waves = r.counter("serve.lm.waves", "LM waves served")
+        self.m_prefill_s = r.counter("serve.lm.prefill_s", "prefill seconds")
+        self.m_decode_s = r.counter("serve.lm.decode_s", "decode seconds")
+        self.m_decode_steps = r.counter("serve.lm.decode_steps", "decode steps run")
+        self.m_idle = r.counter(
+            "serve.lm.idle_token_slots",
+            "finished-request slots still riding decode",
+        )
+
+    @property
+    def waves(self) -> int:
+        return int(self.m_waves.value)
+
+    @property
+    def prefill_s(self) -> float:
+        return self.m_prefill_s.value
+
+    @property
+    def decode_s(self) -> float:
+        return self.m_decode_s.value
+
+    @property
+    def decode_steps(self) -> int:
+        return int(self.m_decode_steps.value)
+
+    @property
+    def idle_token_slots(self) -> int:
+        return int(self.m_idle.value)
 
 
 class ServeEngine:
     """Wave-batched decoding over one model."""
 
     def __init__(self, model, params, *, max_batch: int, max_len: int,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 registry: obs.Registry | None = None,
+                 tracer: obs.Tracer | None = None):
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.temperature = temperature
         self.key = jax.random.key(seed)
-        self.stats = EngineStats()
+        self.obs = registry if registry is not None else obs.Registry()
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+        self.stats = EngineStats(self.obs)
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
 
@@ -85,38 +127,45 @@ class ServeEngine:
         return requests
 
     def _run_wave(self, wave: list[Request], pad_to: Optional[int]) -> None:
-        self.stats.waves += 1
-        toks = self._pad_wave(wave, pad_to)
-        t0 = time.perf_counter()
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
-        jax.block_until_ready(logits)
-        self.stats.prefill_s += time.perf_counter() - t0
-        nxt = self._sample(logits[:, -1, :])
-        for i, r in enumerate(wave):
-            r.out_tokens.append(int(nxt[i]))
-        budget = max(r.max_new_tokens for r in wave)
-        t0 = time.perf_counter()
-        for _ in range(budget - 1):
-            live = [r for r in wave if len(r.out_tokens) < r.max_new_tokens]
-            if not live:
-                break
-            step_tok = np.array(
-                [[r.out_tokens[-1]] for r in wave]
-                + [[0]] * (self.max_batch - len(wave)),
-                np.int32,
-            )
-            logits, cache = self._decode(self.params, cache, {"tokens": jnp.asarray(step_tok)})
+        with self.tracer.span("serve.wave", cat="serve", engine="lm",
+                              requests=len(wave)):
+            self.stats.m_waves.inc()
+            toks = self._pad_wave(wave, pad_to)
+            t0 = time.perf_counter()
+            with self.tracer.span("serve.prefill", cat="serve", width=toks.shape[1]):
+                logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+                jax.block_until_ready(logits)
+            self.stats.m_prefill_s.inc(time.perf_counter() - t0)
             nxt = self._sample(logits[:, -1, :])
-            self.stats.decode_steps += 1
             for i, r in enumerate(wave):
-                if len(r.out_tokens) < r.max_new_tokens:
-                    r.out_tokens.append(int(nxt[i]))
-                else:
-                    self.stats.idle_token_slots += 1
-        jax.block_until_ready(logits)
-        self.stats.decode_s += time.perf_counter() - t0
-        for r in wave:
-            r.done = True
+                r.out_tokens.append(int(nxt[i]))
+            budget = max(r.max_new_tokens for r in wave)
+            t0 = time.perf_counter()
+            with self.tracer.span("serve.decode", cat="serve") as dspan:
+                steps = 0
+                for _ in range(budget - 1):
+                    live = [r for r in wave if len(r.out_tokens) < r.max_new_tokens]
+                    if not live:
+                        break
+                    step_tok = np.array(
+                        [[r.out_tokens[-1]] for r in wave]
+                        + [[0]] * (self.max_batch - len(wave)),
+                        np.int32,
+                    )
+                    logits, cache = self._decode(self.params, cache, {"tokens": jnp.asarray(step_tok)})
+                    nxt = self._sample(logits[:, -1, :])
+                    self.stats.m_decode_steps.inc()
+                    steps += 1
+                    for i, r in enumerate(wave):
+                        if len(r.out_tokens) < r.max_new_tokens:
+                            r.out_tokens.append(int(nxt[i]))
+                        else:
+                            self.stats.m_idle.inc()
+                jax.block_until_ready(logits)
+                dspan.set(steps=steps)
+            self.stats.m_decode_s.inc(time.perf_counter() - t0)
+            for r in wave:
+                r.done = True
 
 
 # ---------------------------------------------------------------------------
@@ -164,7 +213,9 @@ class BackgroundRetuner:
     path only pays a counter increment.
     """
 
-    def __init__(self, measure: Callable, promote: Callable, policy: RetunePolicy):
+    def __init__(self, measure: Callable, promote: Callable, policy: RetunePolicy,
+                 *, registry: obs.Registry | None = None,
+                 tracer: obs.Tracer | None = None):
         self.measure = measure
         self.promote = promote
         self.policy = policy
@@ -174,6 +225,16 @@ class BackgroundRetuner:
         self.errors: list[tuple[str, Exception]] = []
         self._threads: list[threading.Thread] = []
         self._lock = threading.Lock()
+        r = registry if registry is not None else obs.Registry()
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+        self.m_launched = r.counter(
+            "serve.retune.launched", "background re-tune measurements started")
+        self.m_completed = r.counter(
+            "serve.retune.completed", "background re-tunes promoted")
+        self.m_failed = r.counter(
+            "serve.retune.failed", "background re-tunes that raised")
+        self.m_measure_ms = r.histogram(
+            "serve.retune.measure_ms", "background measurement wall time")
 
     def note(self, key: str, batch: np.ndarray) -> None:
         """Record one served wave for ``key``; maybe launch a re-tune."""
@@ -190,15 +251,22 @@ class BackgroundRetuner:
                 target=self._work, args=(key, snap), daemon=True, name=f"retune:{key}"
             )
             self._threads.append(th)
+        self.m_launched.inc()
         th.start()
 
     def _work(self, key: str, batch: np.ndarray) -> None:
         try:
-            entry = self.measure(batch)
-            self.promote(key, entry)
+            t0 = time.perf_counter()
+            with self.tracer.span("serve.retune.measure", cat="serve", bucket=key):
+                entry = self.measure(batch)
+            self.m_measure_ms.observe((time.perf_counter() - t0) * 1e3)
+            with self.tracer.span("serve.retune.promote", cat="serve", bucket=key):
+                self.promote(key, entry)
+            self.m_completed.inc()
             with self._lock:
                 self.done.append((key, entry))
         except Exception as e:  # a failed re-tune must never take serving down
+            self.m_failed.inc()
             with self._lock:
                 self.errors.append((key, e))
 
@@ -247,14 +315,90 @@ def _next_wave(queue: deque, max_batch: int) -> tuple[list, int]:
     return wave, total
 
 
-@dataclasses.dataclass
-class TreeEngineStats:
-    waves: int = 0
-    records: int = 0
-    eval_s: float = 0.0
-    padded_record_slots: int = 0   # bucket-padding rows (the wave's idle lanes)
-    retunes: int = 0               # background winner promotions completed
-    bucket_waves: dict = dataclasses.field(default_factory=dict)  # key → waves served
+class _ClassifierStatsBase:
+    """Shared serve-engine instruments (tree + forest engines).
+
+    One parent instrument per metric, labelled by ``engine`` so a registry
+    shared across engines keeps the series apart; each stats object holds
+    its engine's labelled children as ``m_*`` handles.  The pre-obs
+    dataclass fields survive as read properties — including ``retunes``,
+    which the :class:`BackgroundRetuner` worker increments concurrently
+    with the request thread and which is exactly the counter the locked
+    registry exists for.
+    """
+
+    _engine = "classifier"
+
+    def __init__(self, registry: obs.Registry | None = None):
+        self.registry = registry if registry is not None else obs.Registry()
+        r, eng = self.registry, self._engine
+        lbl = {"engine": eng}
+        self.m_waves = r.counter(
+            "serve.waves", "classification waves served", ("engine",)).labels(**lbl)
+        self.m_records = r.counter(
+            "serve.records", "records served", ("engine",)).labels(**lbl)
+        self.m_eval_s = r.counter(
+            "serve.eval_s", "wave evaluation seconds", ("engine",)).labels(**lbl)
+        self.m_padded_slots = r.counter(
+            "serve.padded_record_slots",
+            "bucket-padding rows (the wave's idle lanes)", ("engine",)).labels(**lbl)
+        self.m_retunes = r.counter(
+            "serve.retunes", "background winner promotions completed",
+            ("engine",)).labels(**lbl)
+        self._bucket_waves = r.counter(
+            "serve.bucket_waves", "waves served per shape bucket",
+            ("engine", "bucket"))
+        self._wave_ms = r.histogram(
+            "serve.wave_ms", "wave latency per shape bucket", ("engine", "bucket"))
+        self.m_queue_wait_ms = r.histogram(
+            "serve.queue_wait_ms",
+            "time a request waited in the queue before its wave started",
+            ("engine",)).labels(**lbl)
+        self.m_pad_fraction = r.histogram(
+            "serve.pad_fraction", "padding rows / bucket rows per wave",
+            ("engine",), boundaries=obs.DEFAULT_RATIO_BOUNDARIES).labels(**lbl)
+
+    def wave_ms(self, bucket: str) -> obs.Histogram:
+        """The wave-latency histogram series for one shape bucket."""
+        return self._wave_ms.labels(engine=self._engine, bucket=bucket)
+
+    def note_bucket_wave(self, bucket: str) -> None:
+        self._bucket_waves.labels(engine=self._engine, bucket=bucket).inc()
+
+    # -- compat read properties (the pre-obs dataclass surface) -------------
+
+    @property
+    def waves(self) -> int:
+        return int(self.m_waves.value)
+
+    @property
+    def records(self) -> int:
+        return int(self.m_records.value)
+
+    @property
+    def eval_s(self) -> float:
+        return self.m_eval_s.value
+
+    @property
+    def padded_record_slots(self) -> int:
+        return int(self.m_padded_slots.value)
+
+    @property
+    def retunes(self) -> int:
+        return int(self.m_retunes.value)
+
+    @property
+    def bucket_waves(self) -> dict:
+        """{bucket key: waves served} — reconstructed from the labelled series."""
+        return {
+            labels[1]: int(series.value)
+            for labels, series in self._bucket_waves.series()
+            if labels[0] == self._engine
+        }
+
+
+class TreeEngineStats(_ClassifierStatsBase):
+    _engine = "tree"
 
 
 class TreeServeEngine:
@@ -278,16 +422,23 @@ class TreeServeEngine:
 
     def __init__(self, tree, *, max_batch: int = 4096, cache=None,
                  autotune: bool = False, engines=None,
-                 retune: RetunePolicy | None = RetunePolicy()):
+                 retune: RetunePolicy | None = RetunePolicy(),
+                 registry: obs.Registry | None = None,
+                 tracer: obs.Tracer | None = None):
         from repro.tune.dispatch import TunedEvaluator
         from repro.tune.measure import tune_workload
         from repro.tune.space import Candidate, WorkloadShape
 
         self._shape_of = WorkloadShape.of
-        self._eval = TunedEvaluator(tree, cache=cache, autotune=autotune, engines=engines)
+        self.obs = registry if registry is not None else obs.Registry()
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+        self._eval = TunedEvaluator(
+            tree, cache=cache, autotune=autotune, engines=engines,
+            registry=self.obs, tracer=self.tracer,
+        )
         self.tree = tree
         self.max_batch = max_batch
-        self.stats = TreeEngineStats()
+        self.stats = TreeEngineStats(self.obs)
         self.retuner: BackgroundRetuner | None = None
         if retune is not None:
 
@@ -295,39 +446,58 @@ class TreeServeEngine:
                 entry, _ = tune_workload(
                     batch, tree, cache=self._eval.cache, engines=engines,
                     warmup=retune.warmup, iters=retune.iters,
+                    registry=self.obs,
                 )
                 return entry
 
             def promote(key, entry):
                 self._eval.promote(key, Candidate.make(entry.variant, **entry.params))
-                self.stats.retunes += 1
+                # locked counter, not `+= 1` on a plain field: this runs on
+                # the retuner worker concurrently with the request thread
+                self.stats.m_retunes.inc()
 
-            self.retuner = BackgroundRetuner(measure, promote, retune)
+            self.retuner = BackgroundRetuner(
+                measure, promote, retune, registry=self.obs, tracer=self.tracer)
 
     def run(self, requests: list[TreeRequest]) -> list[TreeRequest]:
         """Serve all requests in record-count-bounded waves."""
         queue = deque(requests)
+        t_enq = time.perf_counter()
+        for r in queue:
+            r._t_enqueue = t_enq
         while queue:
             self._run_wave(*_next_wave(queue, self.max_batch))
         return requests
 
     def _run_wave(self, wave: list[TreeRequest], total: int) -> None:
-        self.stats.waves += 1
-        self.stats.records += total
+        t_wave = time.perf_counter()
+        for r in wave:
+            enq = getattr(r, "_t_enqueue", None)
+            if enq is not None:
+                self.stats.m_queue_wait_ms.observe((t_wave - enq) * 1e3)
+        self.stats.m_waves.inc()
+        self.stats.m_records.inc(total)
         batch = np.concatenate([r.records for r in wave], axis=0).astype(np.float32)
         shape = self._shape_of(batch, self.tree, self._eval.depth)
-        self.stats.padded_record_slots += shape.bucket().m - total
-        t0 = time.perf_counter()
-        out = np.asarray(jax.block_until_ready(self._eval(batch)))
-        self.stats.eval_s += time.perf_counter() - t0
+        key = shape.key()
+        bucket_m = shape.bucket().m
+        self.stats.m_padded_slots.inc(bucket_m - total)
+        self.stats.m_pad_fraction.observe((bucket_m - total) / max(bucket_m, 1))
+        with self.tracer.span("serve.wave", cat="serve", engine="tree",
+                              requests=len(wave), records=total, bucket=key):
+            t0 = time.perf_counter()
+            with self.tracer.span("kernel.dispatch", cat="kernel", bucket=key):
+                out = np.asarray(jax.block_until_ready(self._eval(batch)))
+            dt = time.perf_counter() - t0
+        self.stats.m_eval_s.inc(dt)
+        self.stats.wave_ms(key).observe(dt * 1e3)
         off = 0
         for r in wave:
             m = r.records.shape[0]
             r.out = out[off:off + m]
             r.done = True
             off += m
-        key = shape.key()
-        self.stats.bucket_waves[key] = self.stats.bucket_waves.get(key, 0) + 1
+        self.stats.note_bucket_wave(key)
         if self.retuner is not None:
             self.retuner.note(key, batch)
 
@@ -362,18 +532,45 @@ class AnytimePolicy:
     calibration_sample: int = 512
 
 
-@dataclasses.dataclass
-class ForestEngineStats:
-    waves: int = 0
-    records: int = 0
-    chunks: int = 0                # streaming chunks across all waves
-    eval_s: float = 0.0
-    chunk_ms: list = dataclasses.field(default_factory=list)  # per-chunk latency
-    retunes: int = 0               # background winner promotions completed
-    bucket_waves: dict = dataclasses.field(default_factory=dict)  # key → waves served
-    anytime_waves: int = 0         # waves served through the anytime cascade
-    anytime_truncations: int = 0   # waves the SLO stopped before the last stage
-    anytime_stages: list = dataclasses.field(default_factory=list)  # stages run per wave
+class ForestEngineStats(_ClassifierStatsBase):
+    _engine = "forest"
+
+    def __init__(self, registry: obs.Registry | None = None):
+        super().__init__(registry)
+        r = self.registry
+        lbl = {"engine": self._engine}
+        self.m_chunks = r.counter(
+            "serve.chunks", "streaming chunks across all waves",
+            ("engine",)).labels(**lbl)
+        self.m_chunk_ms = r.histogram(
+            "serve.chunk_ms", "per-chunk latency", ("engine",)).labels(**lbl)
+        self.m_anytime_waves = r.counter(
+            "serve.anytime.waves", "waves served through the anytime cascade")
+        self.m_anytime_truncations = r.counter(
+            "serve.anytime.truncations",
+            "waves the SLO stopped before the last stage")
+        self.m_anytime_stages = r.histogram(
+            "serve.anytime.stages_run", "cascade stages run per anytime wave",
+            boundaries=_STAGE_BOUNDARIES)
+        self.m_anytime_confidence = r.histogram(
+            "serve.anytime.confidence", "per-record answer confidence",
+            boundaries=obs.DEFAULT_RATIO_BOUNDARIES)
+        # raw per-chunk / per-wave sequences survive as plain lists — benches
+        # take medians over them and tests index into them
+        self.chunk_ms: list = []
+        self.anytime_stages: list = []
+
+    @property
+    def chunks(self) -> int:
+        return int(self.m_chunks.value)
+
+    @property
+    def anytime_waves(self) -> int:
+        return int(self.m_anytime_waves.value)
+
+    @property
+    def anytime_truncations(self) -> int:
+        return int(self.m_anytime_truncations.value)
 
 
 class ForestServeEngine:
@@ -399,22 +596,30 @@ class ForestServeEngine:
                  n_classes: Optional[int] = None, mesh=None, plan=None,
                  decomposition=None, cache=None, autotune: bool = False, engines=None,
                  retune: RetunePolicy | None = RetunePolicy(),
-                 anytime: AnytimePolicy | None = None):
+                 anytime: AnytimePolicy | None = None,
+                 registry: obs.Registry | None = None,
+                 tracer: obs.Tracer | None = None):
         from repro.dist import ShardedForestEvaluator, StreamingChunker
 
         if anytime is not None and n_classes is None:
             raise ValueError("anytime serving needs n_classes (it votes classes)")
+        self.obs = registry if registry is not None else obs.Registry()
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
         self._eval = ShardedForestEvaluator(
             forest, mesh=mesh, plan=plan, decomposition=decomposition,
             cache=cache, autotune=autotune, engines=engines,
+            registry=self.obs, tracer=self.tracer,
         )
-        self._chunker = StreamingChunker(self._eval, chunk_records=chunk_records)
+        self._chunker = StreamingChunker(
+            self._eval, chunk_records=chunk_records,
+            registry=self.obs, tracer=self.tracer,
+        )
         self.forest = self._eval.forest
         self.max_batch = max_batch
         self.n_classes = n_classes
         self.anytime = anytime
         self._cascade = None   # built lazily: calibrated on the first wave
-        self.stats = ForestEngineStats()
+        self.stats = ForestEngineStats(self.obs)
         self.retuner: BackgroundRetuner | None = None
         if retune is not None:
 
@@ -430,9 +635,12 @@ class ForestServeEngine:
                 # resolution state makes the next wave pick it up — the
                 # executor-level analogue of TunedEvaluator.promote
                 self._eval.invalidate_resolution()
-                self.stats.retunes += 1
+                # locked counter, not `+= 1` on a plain field: this runs on
+                # the retuner worker concurrently with the request thread
+                self.stats.m_retunes.inc()
 
-            self.retuner = BackgroundRetuner(measure, promote, retune)
+            self.retuner = BackgroundRetuner(
+                measure, promote, retune, registry=self.obs, tracer=self.tracer)
 
     @property
     def plan(self):
@@ -442,6 +650,9 @@ class ForestServeEngine:
     def run(self, requests: list[TreeRequest]) -> list[TreeRequest]:
         """Serve all requests in record-count-bounded waves."""
         queue = deque(requests)
+        t_enq = time.perf_counter()
+        for r in queue:
+            r._t_enqueue = t_enq
         while queue:
             self._run_wave(*_next_wave(queue, self.max_batch))
         return requests
@@ -458,61 +669,86 @@ class ForestServeEngine:
                 bound=pol.bound,
                 stages=pol.stages,
                 calibration=batch[: pol.calibration_sample],
+                registry=self.obs,
+                tracer=self.tracer,
             )
         return self._cascade
 
     def _run_wave(self, wave: list[TreeRequest], total: int) -> None:
-        self.stats.waves += 1
-        self.stats.records += total
+        t_wave = time.perf_counter()
+        for r in wave:
+            enq = getattr(r, "_t_enqueue", None)
+            if enq is not None:
+                self.stats.m_queue_wait_ms.observe((t_wave - enq) * 1e3)
+        self.stats.m_waves.inc()
+        self.stats.m_records.inc(total)
         batch = np.concatenate([r.records for r in wave], axis=0).astype(np.float32)
-
-        if self.anytime is not None:
-            # anytime path: the cascade owns staging/early exit, so the wave
-            # bypasses the chunker — the SLO check needs whole-stage latencies
-            cascade = self._anytime_cascade(batch)
-            t0 = time.perf_counter()
-            res = cascade(batch, deadline_ms=self.anytime.slo_ms)
-            self.stats.eval_s += time.perf_counter() - t0
-            self.stats.anytime_waves += 1
-            self.stats.anytime_stages.append(res.stages_run)
-            # truncation = the deadline (not the exit bound) stopped the run:
-            # some record never cleared the bound yet has trees left unvoted
-            truncated = res.stages_run < cascade.plan.n_stages and bool(
-                np.any(
-                    (res.exit_stage < 0)
-                    & (res.trees_evaluated < cascade.plan.n_trees)
+        wspan = self.tracer.span(
+            "serve.wave", cat="serve", engine="forest",
+            requests=len(wave), records=total,
+            mode="anytime" if self.anytime is not None else "stream",
+        )
+        with wspan:
+            if self.anytime is not None:
+                # anytime path: the cascade owns staging/early exit, so the
+                # wave bypasses the chunker — the SLO check needs whole-stage
+                # latencies
+                cascade = self._anytime_cascade(batch)
+                t0 = time.perf_counter()
+                res = cascade(batch, deadline_ms=self.anytime.slo_ms)
+                dt = time.perf_counter() - t0
+                self.stats.m_eval_s.inc(dt)
+                self.stats.m_anytime_waves.inc()
+                self.stats.m_anytime_stages.observe(res.stages_run)
+                self.stats.anytime_stages.append(res.stages_run)
+                # truncation = the deadline (not the exit bound) stopped the
+                # run: some record never cleared the bound yet has trees left
+                # unvoted
+                truncated = res.stages_run < cascade.plan.n_stages and bool(
+                    np.any(
+                        (res.exit_stage < 0)
+                        & (res.trees_evaluated < cascade.plan.n_trees)
+                    )
                 )
-            )
-            if truncated:
-                self.stats.anytime_truncations += 1
-            off = 0
-            for r in wave:
-                m = r.records.shape[0]
-                r.out = res.classes[off:off + m]
-                r.confidence = res.confidence[off:off + m]
-                r.done = True
-                off += m
-        else:
-            def on_chunk(latency_ms: float, n: int) -> None:
-                self.stats.chunks += 1
-                self.stats.chunk_ms.append(latency_ms)
-
-            t0 = time.perf_counter()
-            per_tree = self._chunker.eval(batch, on_chunk=on_chunk)   # (T, total)
-            if self.n_classes is not None:
-                from repro.core.forest import majority_vote
-
-                out = np.asarray(majority_vote(jnp.asarray(per_tree), self.n_classes))
+                if truncated:
+                    self.stats.m_anytime_truncations.inc()
+                self.stats.m_anytime_confidence.observe_many(
+                    np.asarray(res.confidence, dtype=np.float64))
+                wspan.set(stages_run=res.stages_run, truncated=truncated)
+                off = 0
+                for r in wave:
+                    m = r.records.shape[0]
+                    r.out = res.classes[off:off + m]
+                    r.confidence = res.confidence[off:off + m]
+                    r.done = True
+                    off += m
             else:
-                out = per_tree
-            self.stats.eval_s += time.perf_counter() - t0
-            off = 0
-            for r in wave:
-                m = r.records.shape[0]
-                r.out = out[off:off + m] if self.n_classes is not None else out[:, off:off + m]
-                r.done = True
-                off += m
-        key = self._eval._forest_evaluator().shape_of(batch).key()
-        self.stats.bucket_waves[key] = self.stats.bucket_waves.get(key, 0) + 1
+                def on_chunk(latency_ms: float, n: int) -> None:
+                    self.stats.m_chunks.inc()
+                    self.stats.m_chunk_ms.observe(latency_ms)
+                    self.stats.chunk_ms.append(latency_ms)
+
+                t0 = time.perf_counter()
+                per_tree = self._chunker.eval(batch, on_chunk=on_chunk)   # (T, total)
+                if self.n_classes is not None:
+                    from repro.core.forest import majority_vote
+
+                    with self.tracer.span("serve.vote", cat="serve", records=total):
+                        out = np.asarray(
+                            majority_vote(jnp.asarray(per_tree), self.n_classes))
+                else:
+                    out = per_tree
+                dt = time.perf_counter() - t0
+                self.stats.m_eval_s.inc(dt)
+                off = 0
+                for r in wave:
+                    m = r.records.shape[0]
+                    r.out = out[off:off + m] if self.n_classes is not None else out[:, off:off + m]
+                    r.done = True
+                    off += m
+            key = self._eval._forest_evaluator().shape_of(batch).key()
+            wspan.set(bucket=key)
+        self.stats.wave_ms(key).observe(dt * 1e3)
+        self.stats.note_bucket_wave(key)
         if self.retuner is not None:
             self.retuner.note(key, batch)

@@ -29,6 +29,7 @@ import threading
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.tree import EncodedTree, tree_depth
 from repro.kernels.tree_eval.cascade import (
     CASCADE_VARIANTS,
@@ -61,6 +62,49 @@ from repro.tune.measure import (
 from repro.tune.space import Candidate, ForestShape, WorkloadShape, backend_tag
 
 
+class _TuneObs:
+    """The tuner's shared instrument set on one registry.
+
+    Levels: ``tree`` (per-tree variant resolution), ``forest`` (family
+    resolution), ``classes`` (majority-vote vs cascade).  The agreement
+    counter compares each *measured* winner against what the §3.6 heuristic
+    would have picked for the same bucket — the running answer to "is the
+    model good enough to skip measuring?".
+    """
+
+    def __init__(self, registry: obs.Registry | None,
+                 tracer: obs.Tracer | None):
+        self.registry = registry if registry is not None else obs.default_registry()
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+        r = self.registry
+        self.resolutions = r.counter(
+            "tune.resolutions", "kernel resolutions by level and source",
+            ("level", "source"))
+        self.swaps = r.counter(
+            "tune.winner_swaps", "atomic winner promotions (background re-tune)",
+            ("level",))
+        self.agreement = r.counter(
+            "tune.heuristic_agreement",
+            "measured winner vs §3.6-heuristic pick, per autotune resolution",
+            ("level", "agree"))
+
+    def note_resolution(self, level: str, source: str) -> None:
+        self.resolutions.labels(level=level, source=source).inc()
+
+    def note_swap(self, level: str, key: str) -> None:
+        self.swaps.labels(level=level).inc()
+        self.tracer.instant("tune.promote", cat="tune", level=level, bucket=key)
+
+    def note_agreement(self, level: str, measured: Candidate,
+                       heuristic_pick) -> None:
+        try:
+            h = heuristic_pick()
+            agree = "yes" if h.variant == measured.variant else "no"
+        except Exception:
+            agree = "error"
+        self.agreement.labels(level=level, agree=agree).inc()
+
+
 class TunedEvaluator:
     """Reusable tuned dispatcher for one encoded tree.
 
@@ -80,11 +124,14 @@ class TunedEvaluator:
         measure_d_mu: bool = True,
         d_mu_sample: int = 256,
         heuristic_kw: dict | None = None,
+        registry: obs.Registry | None = None,
+        tracer: obs.Tracer | None = None,
     ):
         self.enc = enc
         self.cache = cache if cache is not None else TuneCache()
         self.autotune = autotune
         self.engines = engines
+        self._obs = _TuneObs(registry, tracer)
         self.measure_kw = dict(measure_kw or {})
         # heuristic fallback: measure d_µ on a sample of the actual batch
         # (paper: "measured on a significant sample") instead of trusting
@@ -115,6 +162,7 @@ class TunedEvaluator:
             self._gen += 1
             self._resolved[key] = (cand, "retune")
             self._fast.clear()
+        self._obs.note_swap("tree", key)
 
     def invalidate(self) -> None:
         """Drop all resolution memos so the next call re-reads the cache."""
@@ -131,6 +179,7 @@ class TunedEvaluator:
         key = shape.key(backend)
         hit = self._resolved.get(key)
         if hit is not None:
+            self._obs.note_resolution("tree", "memo")
             return hit[0], "memo"
 
         entry = self.cache.lookup(key)
@@ -138,22 +187,31 @@ class TunedEvaluator:
         if entry is not None and entry.variant in VARIANTS:
             cand = Candidate.make(entry.variant, **entry.params)
         elif self.autotune:
-            entry, _ = tune_workload(
-                records,
-                self.enc,
-                cache=self.cache,
-                engines=self.engines,
-                backend=backend,
-                **self.measure_kw,
-            )
+            with self._obs.tracer.span("tune.measure", cat="tune",
+                                       level="tree", bucket=key):
+                entry, _ = tune_workload(
+                    records,
+                    self.enc,
+                    cache=self.cache,
+                    engines=self.engines,
+                    backend=backend,
+                    registry=self._obs.registry,
+                    **self.measure_kw,
+                )
             cand = Candidate.make(entry.variant, **entry.params)
             source = "autotune"
+            self._obs.note_agreement(
+                "tree", cand,
+                lambda: heuristic_candidate(
+                    shape, engines=self.engines, **self.heuristic_kw),
+            )
         else:
             kw = dict(self.heuristic_kw)
             if self.measure_d_mu and "d_mu" not in kw:
                 kw["d_mu"] = measured_d_mu(self.enc, records, sample=self.d_mu_sample)
             cand = heuristic_candidate(shape, engines=self.engines, **kw)
             source = "heuristic"
+        self._obs.note_resolution("tree", source)
         # setdefault under the lock: if a background promote() landed while
         # we resolved, its winner must not be overwritten with ours (and the
         # returned value is read inside the same critical section — a
@@ -246,6 +304,8 @@ class ForestTunedEvaluator:
         measure_d_mu: bool = True,
         d_mu_sample: int = 256,
         heuristic_kw: dict | None = None,
+        registry: obs.Registry | None = None,
+        tracer: obs.Tracer | None = None,
     ):
         from repro.core.forest import EncodedForest  # local: core ↔ tune layering
 
@@ -253,6 +313,7 @@ class ForestTunedEvaluator:
         self.cache = cache if cache is not None else TuneCache()
         self.autotune = autotune
         self.engines = engines
+        self._obs = _TuneObs(registry, tracer)
         self.families = families
         self.measure_kw = dict(measure_kw or {})
         self.measure_d_mu = measure_d_mu
@@ -283,6 +344,7 @@ class ForestTunedEvaluator:
             self._gen += 1
             self._resolved[key] = (cand, "retune")
             self._fast.clear()
+        self._obs.note_swap("forest", key)
 
     def invalidate(self) -> None:
         """Drop all resolution memos so the next call re-reads the cache."""
@@ -322,6 +384,7 @@ class ForestTunedEvaluator:
         key = shape.key(backend)
         hit = self._resolved.get(key)
         if hit is not None:
+            self._obs.note_resolution("forest", "memo")
             return hit[0], "memo"
 
         entry = self.cache.lookup(key)
@@ -333,20 +396,29 @@ class ForestTunedEvaluator:
         ):
             cand = Candidate.make(entry.variant, **entry.params)
         elif self.autotune:
-            entry, _ = tune_forest_workload(
-                records,
-                self.forest,
-                cache=self.cache,
-                engines=self.engines,
-                families=self.families,
-                backend=backend,
-                autotune_trees=True,   # per-tree family priced at its tuned best
-                store=self.families is None,  # a restricted winner must not
-                                              # overwrite the bucket's one
-                **self.measure_kw,
-            )
+            with self._obs.tracer.span("tune.measure", cat="tune",
+                                       level="forest", bucket=key):
+                entry, _ = tune_forest_workload(
+                    records,
+                    self.forest,
+                    cache=self.cache,
+                    engines=self.engines,
+                    families=self.families,
+                    backend=backend,
+                    autotune_trees=True,   # per-tree family priced at its tuned best
+                    store=self.families is None,  # a restricted winner must not
+                                                  # overwrite the bucket's one
+                    registry=self._obs.registry,
+                    **self.measure_kw,
+                )
             cand = Candidate.make(entry.variant, **entry.params)
             source = "autotune"
+            self._obs.note_agreement(
+                "forest", cand,
+                lambda: forest_heuristic_candidate(
+                    shape, engines=self.engines, families=self.families,
+                    **self.heuristic_kw),
+            )
         else:
             kw = dict(self.heuristic_kw)
             if self.measure_d_mu and "d_mu" not in kw:
@@ -357,6 +429,7 @@ class ForestTunedEvaluator:
                 shape, engines=self.engines, families=self.families, **kw
             )
             source = "heuristic"
+        self._obs.note_resolution("forest", source)
         # same critical-section discipline as TunedEvaluator.resolve: don't
         # clobber a concurrent promote(), don't re-read after unlocking
         with self._swap_lock:
@@ -371,6 +444,7 @@ class ForestTunedEvaluator:
                 TunedEvaluator(
                     self.forest.tree(i), cache=self.cache, engines=self.engines,
                     autotune=self.autotune, measure_kw=self.measure_kw,
+                    registry=self._obs.registry, tracer=self._obs.tracer,
                 )
                 for i in range(self.forest.n_trees)
             ]
@@ -435,6 +509,7 @@ class ForestTunedEvaluator:
         key = shape.classes_key(n_classes, backend)
         hit = self._resolved.get(key)
         if hit is not None:
+            self._obs.note_resolution("classes", "memo")
             return hit[0], "memo"
 
         entry = self.cache.lookup(key)
@@ -444,15 +519,18 @@ class ForestTunedEvaluator:
         ):
             cand = Candidate.make(entry.variant, **entry.params)
         elif self.autotune:
-            entry, _ = tune_cascade_workload(
-                records,
-                self.forest,
-                n_classes,
-                cache=self.cache,
-                engines=self.engines,
-                backend=backend,
-                **self.measure_kw,
-            )
+            with self._obs.tracer.span("tune.measure", cat="tune",
+                                       level="classes", bucket=key):
+                entry, _ = tune_cascade_workload(
+                    records,
+                    self.forest,
+                    n_classes,
+                    cache=self.cache,
+                    engines=self.engines,
+                    backend=backend,
+                    registry=self._obs.registry,
+                    **self.measure_kw,
+                )
             cand = Candidate.make(entry.variant, **entry.params)
             source = "autotune"
         else:
@@ -470,6 +548,7 @@ class ForestTunedEvaluator:
                 shape, n_classes, survival=survival, engines=self.engines, **kw
             )
             source = "heuristic"
+        self._obs.note_resolution("classes", source)
         with self._swap_lock:
             resolved = self._resolved.setdefault(key, (cand, source))
         return resolved[0], source
@@ -493,6 +572,8 @@ class ForestTunedEvaluator:
             bound=1.0,
             block_m=params.get("block_m"),
             calibration=records,
+            registry=self._obs.registry,
+            tracer=self._obs.tracer,
         )
 
         def run(rec):

@@ -15,6 +15,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.tree_eval.cascade import MAJORITY_FAMILY, get_cascade_variant
 from repro.kernels.tree_eval.ops import (
     PER_TREE_FAMILY,
@@ -50,6 +51,30 @@ def _median(xs) -> float:
     n = len(xs)
     mid = n // 2
     return xs[mid] if n % 2 else (xs[mid - 1] + xs[mid]) / 2.0
+
+
+def _note_measurements(registry, level: str, measurements) -> None:
+    """Record one sweep's outcomes: per-candidate medians and failure count.
+
+    Levels mirror the dispatch ladder (``tree`` / ``forest`` / ``classes``);
+    without an explicit registry the sweep lands in the process default, so
+    one-shot functional tuning is visible too.
+    """
+    r = registry if registry is not None else obs.default_registry()
+    measured = r.counter(
+        "tune.measurements", "candidates measured per sweep", ("level",))
+    failed = r.counter(
+        "tune.failed_candidates",
+        "candidates that raised during measurement", ("level",))
+    ms = r.histogram(
+        "tune.measure_ms", "per-candidate median measurement time",
+        ("level",)).labels(level=level)
+    for m in measurements:
+        measured.labels(level=level).inc()
+        if m.failed:
+            failed.labels(level=level).inc()
+        else:
+            ms.observe(m.median_ms)
 
 
 def time_callable(fn, *, warmup: int = 2, iters: int = 5) -> tuple[float, ...]:
@@ -180,6 +205,7 @@ def tune_workload(
     iters: int = 5,
     backend: str | None = None,
     verbose: bool = False,
+    registry: obs.Registry | None = None,
 ) -> tuple[TuneEntry, list[Measurement]]:
     """Time every valid candidate for this workload and record the winner.
 
@@ -200,6 +226,7 @@ def tune_workload(
         measure_candidate(c, rec, enc, max_depth=depth, warmup=warmup, iters=iters)
         for c in search_space(shape, engines=engines)
     ]
+    _note_measurements(registry, "tree", measurements)
     ok = [m for m in measurements if not m.failed]
     if not ok:
         raise RuntimeError(f"no candidate succeeded for shape {shape}")
@@ -300,6 +327,7 @@ def tune_forest_workload(
     verbose: bool = False,
     autotune_trees: bool = False,
     store: bool = True,
+    registry: obs.Registry | None = None,
 ) -> tuple[TuneEntry, list[Measurement]]:
     """Time every valid forest candidate and record the winning family.
 
@@ -339,6 +367,7 @@ def tune_forest_workload(
         )
         for c in forest_search_space(shape, engines=engines, families=families)
     ]
+    _note_measurements(registry, "forest", measurements)
     ok = [m for m in measurements if not m.failed]
     if not ok:
         raise RuntimeError(f"no forest candidate succeeded for shape {shape}")
@@ -425,6 +454,7 @@ def tune_cascade_workload(
     backend: str | None = None,
     verbose: bool = False,
     store: bool = True,
+    registry: obs.Registry | None = None,
 ) -> tuple[TuneEntry, list[Measurement]]:
     """Time every class-level candidate and record the winner.
 
@@ -447,6 +477,7 @@ def tune_cascade_workload(
         )
         for c in cascade_search_space(shape, n_classes, engines=engines)
     ]
+    _note_measurements(registry, "classes", measurements)
     ok = [m for m in measurements if not m.failed]
     if not ok:
         raise RuntimeError(f"no class-level candidate succeeded for shape {shape}")

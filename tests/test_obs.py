@@ -1,0 +1,433 @@
+"""repro.obs: registry semantics, thread-safety regressions, exporters, and
+the serve-stack integration contract — a traced `ForestServeEngine` wave must
+yield nested serve.wave > stream.eval > kernel.dispatch spans and a snapshot
+carrying per-bucket wave-latency percentiles, per-stage cascade survival and
+the chunker's overlap-ratio histogram.
+"""
+
+import json
+import pathlib
+import sys
+import tempfile
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import obs
+from repro.core import EncodedForest, breadth_first_encode, random_tree
+from repro.tune import TuneCache
+
+
+def _forest(n_trees=8, n_attrs=9, n_classes=6, seed0=0):
+    trees = [
+        breadth_first_encode(
+            random_tree(n_attrs=n_attrs, n_classes=n_classes,
+                        max_depth=2 + (i % 4), seed=seed0 + i)
+        )
+        for i in range(n_trees)
+    ]
+    return EncodedForest(trees)
+
+
+def _cache():
+    return TuneCache(pathlib.Path(tempfile.mkdtemp()) / "c.json")
+
+
+def _records(m, a, seed=0):
+    return np.random.default_rng(seed).normal(size=(m, a)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_counter_gauge_histogram_basics(self):
+        r = obs.Registry()
+        c = r.counter("t.count", "a counter")
+        c.inc()
+        c.inc(4)
+        assert c.value == 5
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+        g = r.gauge("t.gauge")
+        g.set(3.5)
+        assert g.value == 3.5
+
+        h = r.histogram("t.hist", boundaries=(1.0, 10.0, 100.0))
+        for v in (0.5, 5.0, 50.0, 500.0):
+            h.observe(v)
+        s = h.state()
+        assert s["count"] == 4 and s["bucket_counts"] == [1, 1, 1, 1]
+        assert s["min"] == 0.5 and s["max"] == 500.0
+        p = h.percentiles()
+        assert p["p50"] is not None and p["p50"] <= p["p95"] <= p["p99"]
+
+    def test_labels_memoise_children(self):
+        r = obs.Registry()
+        c = r.counter("t.labelled", "", ("k",))
+        assert c.labels(k="a") is c.labels(k="a")
+        c.labels(k="a").inc(2)
+        c.labels(k="b").inc()
+        got = {lv: s.value for lv, s in c.series()}
+        assert got == {("a",): 2, ("b",): 1}
+
+    def test_observe_many_matches_repeated_observe(self):
+        bs = (1.0, 4.0, 16.0)
+        vals = [0.1, 1.0, 2.0, 4.5, 16.0, 99.0, 0.0]
+        r = obs.Registry()
+        one, many = (r.histogram(n, boundaries=bs) for n in ("t.one", "t.many"))
+        for v in vals:
+            one.observe(v)
+        many.observe_many(vals)
+        assert one.state() == many.state()
+        # and the pure-python fallback agrees with the numpy path
+        nonp = r.histogram("t.nonp", boundaries=bs)
+        import repro.obs.metrics as metrics_mod
+
+        saved = metrics_mod._np
+        metrics_mod._np = None
+        try:
+            nonp.observe_many(vals)
+        finally:
+            metrics_mod._np = saved
+        assert nonp.state() == many.state()
+
+    def test_observe_many_empty_is_noop(self):
+        r = obs.Registry()
+        h = r.histogram("t.empty")
+        h.observe_many([])
+        h.observe_many(np.array([]))
+        assert h.state()["count"] == 0
+
+    def test_disabled_registry_mutations_are_noops(self):
+        r = obs.Registry(enabled=False)
+        c, g, h = r.counter("t.c"), r.gauge("t.g"), r.histogram("t.h")
+        c.inc(10)
+        g.set(7)
+        h.observe(1.0)
+        h.observe_many([1.0, 2.0])
+        assert c.value == 0 and g.value == 0 and h.state()["count"] == 0
+
+    def test_duplicate_registration(self):
+        r = obs.Registry()
+        c = r.counter("t.dup", "help", ("k",))
+        # identical re-registration hands back the same instrument
+        assert r.counter("t.dup", "help", ("k",)) is c
+        with pytest.raises(obs.DuplicateMetricError):
+            r.gauge("t.dup")                       # kind conflict
+        with pytest.raises(obs.DuplicateMetricError):
+            r.counter("t.dup", "help", ("other",))  # label conflict
+
+    def test_counter_inc_is_thread_safe(self):
+        """Regression for the serve-path retunes race: `stats.retunes += 1`
+        from the BackgroundRetuner worker could lose increments against the
+        request thread.  The locked counter must count exactly."""
+        r = obs.Registry()
+        c = r.counter("t.race")
+        n_threads, per_thread = 4, 20_000
+        old = sys.getswitchinterval()
+        sys.setswitchinterval(1e-5)    # force frequent preemption
+        try:
+            ts = [threading.Thread(target=lambda: [c.inc() for _ in range(per_thread)])
+                  for _ in range(n_threads)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        finally:
+            sys.setswitchinterval(old)
+        assert c.value == n_threads * per_thread
+
+    def test_engine_retunes_counter_exact_under_contention(self):
+        """The engine-facing regression: concurrent m_retunes.inc() from a
+        worker thread and reads of the compat `.retunes` property never lose
+        an increment."""
+        from repro.serve.engine import ForestEngineStats
+
+        stats = ForestEngineStats(obs.Registry())
+        per_thread = 10_000
+        seen = []
+
+        def bump():
+            for _ in range(per_thread):
+                stats.m_retunes.inc()
+
+        def read():
+            for _ in range(per_thread):
+                seen.append(stats.retunes)
+
+        ts = [threading.Thread(target=bump), threading.Thread(target=bump),
+              threading.Thread(target=read)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert stats.retunes == 2 * per_thread
+        assert all(0 <= v <= 2 * per_thread for v in seen)
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+
+class TestExport:
+    def _populated(self):
+        r = obs.Registry()
+        r.counter("x.count", "c", ("k",)).labels(k="a").inc(3)
+        r.gauge("x.gauge").set(1.5)
+        h = r.histogram("x.hist", "h", boundaries=(1.0, 10.0))
+        h.observe_many([0.5, 5.0, 50.0])
+        return r
+
+    def test_snapshot_round_trips_json(self):
+        snap = obs.snapshot(self._populated())
+        again = json.loads(json.dumps(snap))
+        assert again["counters"]['x.count{k="a"}'] == 3
+        assert again["gauges"]["x.gauge"] == 1.5
+        hist = again["histograms"]["x.hist"]
+        assert hist["count"] == 3 and hist["bucket_counts"] == [1, 1, 1]
+        assert hist["p50"] is not None
+
+    def test_empty_histogram_percentiles_are_null(self):
+        r = obs.Registry()
+        r.histogram("x.none")
+        hist = obs.snapshot(r)["histograms"]["x.none"]
+        assert hist["count"] == 0
+        assert hist["p50"] is None and hist["p99"] is None
+
+    def test_prometheus_text_shape(self):
+        text = obs.prometheus_text(self._populated())
+        assert text.endswith("\n")
+        lines = text.splitlines()
+        assert "# TYPE x_count counter" in lines
+        assert 'x_count{k="a"} 3' in lines
+        assert "# TYPE x_hist histogram" in lines
+        # histogram triplet: cumulative buckets + +Inf + sum/count
+        assert 'x_hist_bucket{le="1"} 1' in lines
+        assert 'x_hist_bucket{le="+Inf"} 3' in lines
+        assert "x_hist_count 3" in lines
+        for line in lines:
+            if not line.startswith("#"):
+                float(line.rsplit(" ", 1)[1])    # every sample value parses
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+
+class TestTracer:
+    def test_span_nesting_and_chrome_export(self, tmp_path):
+        tr = obs.Tracer()
+        with tr.span("outer", a=1):
+            with tr.span("inner"):
+                pass
+        tr.instant("marker", b=2)
+        names = [e.name for e in tr.events()]
+        assert names == ["inner", "outer", "marker"]   # recorded on exit
+        path = tmp_path / "trace.json"
+        tr.write_chrome_trace(path)
+        doc = json.loads(path.read_text())
+        evs = {e["name"]: e for e in doc["traceEvents"]}
+        outer, inner = evs["outer"], evs["inner"]
+        assert outer["ts"] <= inner["ts"]
+        assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"]
+        # instants export as zero-duration complete events
+        assert evs["marker"]["ph"] == "X" and evs["marker"]["dur"] == 0
+
+    def test_set_after_exit_lands_in_event(self):
+        tr = obs.Tracer()
+        with tr.span("late") as sp:
+            pass
+        sp.set(result=42)
+        (ev,) = tr.events()
+        assert ev.args["result"] == 42
+
+    def test_disabled_tracer_records_nothing(self):
+        tr = obs.Tracer(enabled=False)
+        with tr.span("x") as sp:
+            sp.set(k=1)
+        tr.instant("y")
+        assert tr.events() == []
+        assert obs.NULL_TRACER.events() == []
+
+    def test_ring_buffer_keeps_newest(self):
+        tr = obs.Tracer(capacity=4)
+        for i in range(10):
+            tr.instant(f"e{i}")
+        names = [e.name for e in tr.events()]
+        assert names == ["e6", "e7", "e8", "e9"]
+
+
+# ---------------------------------------------------------------------------
+# streaming chunker edge cases
+# ---------------------------------------------------------------------------
+
+
+class _FakeEvaluator:
+    """records → (T, m) without blocking, like ShardedForestEvaluator."""
+
+    class forest:
+        n_trees = 4
+
+    def __call__(self, rec):
+        return jnp.zeros((4, rec.shape[0]), jnp.int32)
+
+
+class TestStreamOverlapEdges:
+    def test_zero_record_eval(self):
+        from repro.dist import StreamingChunker
+
+        ck = StreamingChunker(_FakeEvaluator(), chunk_records=64)
+        out = ck.eval(np.zeros((0, 9), np.float32))
+        assert out.shape == (4, 0)
+        assert ck.stats.chunks == 0
+        assert ck.stats.overlap_ratio == [] and ck.stats.chunk_ms == []
+        assert obs.snapshot(ck.stats.registry)["histograms"][
+            "stream.overlap_ratio"]["count"] == 0
+
+    def test_single_chunk_has_zero_overlap(self):
+        from repro.dist import StreamingChunker
+
+        ck = StreamingChunker(_FakeEvaluator(), chunk_records=1024)
+        ck.eval(_records(100, 9))
+        assert ck.stats.chunks == 1
+        assert ck.stats.overlap_ratio == [0.0]
+
+    def test_inflight_one_still_bounds_overlap(self):
+        from repro.dist import StreamingChunker
+
+        ck = StreamingChunker(_FakeEvaluator(), chunk_records=64, inflight=1,
+                              auto_coalesce=False)
+        ck.eval(_records(400, 9))
+        assert ck.stats.chunks == 7                     # ceil(400/64)
+        rs = ck.stats.overlap_ratio
+        assert len(rs) == 7 and rs[0] == 0.0
+        assert all(0.0 <= o <= 1.0 for o in rs)
+        # histogram twin saw the same observations
+        hist = obs.snapshot(ck.stats.registry)["histograms"]["stream.overlap_ratio"]
+        assert hist["count"] == 7
+
+
+# ---------------------------------------------------------------------------
+# anytime accounting when the SLO is never exceeded
+# ---------------------------------------------------------------------------
+
+
+class TestAnytimeAccounting:
+    def test_generous_slo_never_truncates(self):
+        from repro.serve import AnytimePolicy, ForestServeEngine, TreeRequest
+
+        registry = obs.Registry()
+        forest = _forest()
+        eng = ForestServeEngine(
+            forest, max_batch=256, n_classes=6, cache=_cache(),
+            anytime=AnytimePolicy(slo_ms=60_000.0, stages=3),
+            registry=registry,
+        )
+        reqs = [TreeRequest(uid=i, records=_records(64, 9, seed=i))
+                for i in range(3)]
+        eng.run(reqs)
+        n_waves = eng.stats.anytime_waves
+        assert n_waves >= 1
+        assert eng.stats.anytime_truncations == 0
+        # no deadline pressure: the only early stop is every record exiting,
+        # so each wave accounts 1..stages stages and none count as truncated
+        assert len(eng.stats.anytime_stages) == n_waves
+        assert all(1 <= s <= 3 for s in eng.stats.anytime_stages)
+        snap = obs.snapshot(registry)
+        assert snap["counters"].get("serve.anytime.truncations", 0) == 0
+        stages = snap["histograms"]["serve.anytime.stages_run"]
+        assert stages["count"] == n_waves
+        assert stages["sum"] == sum(eng.stats.anytime_stages)
+        conf = snap["histograms"]["serve.anytime.confidence"]
+        assert conf["count"] == sum(len(r.records) for r in reqs)
+        assert 0.0 <= conf["min"] and conf["max"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# serve-stack integration: one registry + tracer across the whole stack
+# ---------------------------------------------------------------------------
+
+
+def _contains(outer: dict, inner: dict) -> bool:
+    return (outer["tid"] == inner["tid"]
+            and outer["ts"] <= inner["ts"]
+            and inner["ts"] + inner.get("dur", 0)
+            <= outer["ts"] + outer.get("dur", 0))
+
+
+class TestServeStackIntegration:
+    def test_traced_wave_spans_and_snapshot(self, tmp_path):
+        from repro.serve import AnytimePolicy, ForestServeEngine, TreeRequest
+
+        registry, tracer = obs.Registry(), obs.Tracer()
+        forest = _forest()
+        cache = _cache()
+
+        stream_eng = ForestServeEngine(
+            forest, max_batch=256, chunk_records=64, n_classes=6, cache=cache,
+            registry=registry, tracer=tracer,
+        )
+        stream_eng.run([TreeRequest(uid=i, records=_records(128, 9, seed=i))
+                        for i in range(2)])
+        anytime_eng = ForestServeEngine(
+            forest, max_batch=256, n_classes=6, cache=cache,
+            anytime=AnytimePolicy(slo_ms=60_000.0, stages=3),
+            registry=registry, tracer=tracer,
+        )
+        anytime_eng.run([TreeRequest(uid=9, records=_records(64, 9, seed=9))])
+
+        # -- spans: the Chrome trace nests wave > chunked eval > kernel ----
+        doc = tracer.chrome_trace()
+        json.dumps(doc)                                # serialisable
+        by_name: dict[str, list] = {}
+        for ev in doc["traceEvents"]:
+            by_name.setdefault(ev["name"], []).append(ev)
+        for name in ("serve.wave", "stream.eval", "stream.chunk.submit",
+                     "kernel.dispatch", "serve.vote", "cascade.eval"):
+            assert name in by_name, f"span {name!r} missing from trace"
+        assert any(
+            _contains(w, e) and _contains(e, k)
+            for w in by_name["serve.wave"]
+            for e in by_name["stream.eval"]
+            for k in by_name["kernel.dispatch"]
+        ), "no serve.wave > stream.eval > kernel.dispatch nesting"
+        assert any(
+            _contains(w, c)
+            for w in by_name["serve.wave"]
+            for c in by_name["cascade.eval"]
+        ), "anytime wave does not contain its cascade.eval span"
+
+        # -- snapshot: per-bucket latency percentiles, cascade survival, ---
+        # -- chunker overlap -----------------------------------------------
+        snap = obs.snapshot(registry)
+        waves = {k: v for k, v in snap["histograms"].items()
+                 if k.startswith('serve.wave_ms{engine="forest"')}
+        assert waves, "no per-bucket serve.wave_ms series"
+        for hist in waves.values():
+            assert hist["count"] >= 1
+            assert hist["p50"] is not None
+            assert hist["p50"] <= hist["p95"] <= hist["p99"]
+        survival = {k: v for k, v in snap["histograms"].items()
+                    if k.startswith("cascade.stage_survival{")}
+        assert 1 <= len(survival) <= 3                  # one series per stage run
+        for hist in survival.values():
+            assert hist["count"] >= 1 and 0.0 <= hist["max"] <= 1.0
+        overlap = snap["histograms"]["stream.overlap_ratio"]
+        assert overlap["count"] == stream_eng.stats.chunks > 0
+        assert snap["counters"]['serve.waves{engine="forest"}'] >= 2
+
+        # -- exporters stay consistent with the live registry --------------
+        text = obs.prometheus_text(registry)
+        assert "serve_wave_ms_bucket" in text
+        assert "cascade_stage_survival_bucket" in text
+        out = tmp_path / "snap.json"
+        obs.write_json_snapshot(registry, out)
+        assert json.loads(out.read_text()) == json.loads(json.dumps(snap))
