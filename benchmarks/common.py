@@ -67,6 +67,8 @@ class Timing:
     std_us: float
     n: int
     median_us: float = 0.0
+    mad_us: float = 0.0  # median absolute deviation — the dispersion the
+                         # regression gate trusts (std is outlier-hostage)
 
     def row(self) -> str:
         return (f"{self.name:32s} {self.mean_us:12.1f} {self.min_us:12.1f} "
@@ -84,6 +86,7 @@ def record_timing(t: Timing, **meta) -> None:
     _RECORDS.append({
         "name": t.name,
         "median_ms": t.median_us / 1e3,
+        "mad_ms": t.mad_us / 1e3,
         "mean_ms": t.mean_us / 1e3,
         "min_ms": t.min_us / 1e3,
         "max_ms": t.max_us / 1e3,
@@ -131,6 +134,11 @@ def env_header() -> dict:
     }
 
 
+def history_dir() -> Path:
+    """Where the bench trajectory lives (sibling of the BENCH snapshots)."""
+    return bench_json_path("_").parent / "history"
+
+
 def write_bench_json(name: str, entries: list[dict], **header) -> Path:
     path = bench_json_path(name)
     path.parent.mkdir(parents=True, exist_ok=True)
@@ -143,6 +151,11 @@ def write_bench_json(name: str, entries: list[dict], **header) -> Path:
         "entries": entries,
     }
     path.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
+    # The snapshot above is overwritten every run; the trajectory only ever
+    # appends — results/check_regressions.py gates CI on it.
+    from repro.obs.perf import append_history
+
+    append_history(history_dir(), name, payload)
     return path
 
 
@@ -155,8 +168,10 @@ def time_fn(name: str, fn, *, iters: int = 50, warmup: int = 3, **meta) -> Timin
         fn()
         samples.append((time.perf_counter() - t0) * 1e6)
     a = np.asarray(samples)
+    med = float(np.median(a))
     t = Timing(name, float(a.mean()), float(a.min()), float(a.max()),
-               float(a.std()), iters, float(np.median(a)))
+               float(a.std()), iters, med,
+               float(np.median(np.abs(a - med))))
     record_timing(t, **meta)
     return t
 

@@ -39,7 +39,24 @@ from repro.tune import (
     tune_forest_workload,
     tune_workload,
 )
-from repro.tune.measure import interleaved_samples
+from repro.tune.measure import interleaved_samples, roofline_fraction
+
+
+def _winner_cost(measurements, achieved_ms: float) -> dict:
+    """flops / bytes / roofline_frac of the sweep winner's compiled HLO.
+
+    The static cost comes from the winning measurement; the roofline
+    fraction is recomputed against the *dispatch* median actually reported
+    (``achieved_ms``), so the column grades what the bench publishes.
+    """
+    ok = [m for m in measurements if not m.failed]
+    best = min(ok, key=lambda m: m.median_ms) if ok else None
+    cost = (best.cost if best is not None else None) or {}
+    flops, bytes_ = cost.get("flops"), cost.get("bytes")
+    frac = (roofline_fraction(flops, bytes_, achieved_ms)
+            if flops is not None else None)
+    return {"flops": flops, "bytes": bytes_,
+            "roofline_frac": round(frac, 6) if frac is not None else None}
 
 # Distinct operating points (paper §5–§6: the winner depends on where you sit).
 WORKLOADS = [
@@ -119,8 +136,11 @@ def sweep_one(name, build_tree, m, n_attrs, *, cache, iters, warmup):
         "best_variant": entry.variant,
         "best_params": entry.params,
         "tuned_ms": round(tuned_ms, 6),
+        "tuned_mad_ms": round(
+            float(np.median(np.abs(np.asarray(samples["tuned"]) - tuned_ms))), 6),
         "tuned_vs_best_fixed": round(ratio, 4),
         "tuned_within_noise_of_best": bool(ok),
+        **_winner_cost(measurements, tuned_ms),
     }
 
 
@@ -188,9 +208,12 @@ def sweep_forest(name, depths, m, n_attrs, *, cache, iters, warmup):
         "best_variant": entry.variant,
         "best_params": entry.params,
         "forest_tuned_ms": round(tuned_ms, 6),
+        "forest_tuned_mad_ms": round(
+            float(np.median(np.abs(np.asarray(samples["forest_tuned"]) - tuned_ms))), 6),
         "per_tree_ms": round(per_tree_ms, 6),
         "forest_tuned_vs_per_tree": round(ratio, 4),
         "forest_tuned_not_worse": bool(ratio <= 1.25),
+        **_winner_cost(measurements, tuned_ms),
     }
 
 

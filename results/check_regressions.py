@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""CI perf gate: flag noise-aware regressions in results/history/*.jsonl.
+
+Reads every bench trajectory appended by ``benchmarks/common.py`` (one JSONL
+line per run: env header + per-workload medians/MAD) and runs
+:func:`repro.obs.perf.detect_regressions` — latest median vs the median of
+the last K same-environment runs, flagged when it exceeds the baseline by
+``max(rel_threshold · baseline, k_mad · MAD)``.  Runs from a different
+backend / device / jax version never compare.
+
+Exit status: 0 = clean, 1 = regression found.  ``--strict`` additionally
+fails on structural problems — no history at all, an empty/corrupt
+trajectory — so the CI ``perf-gate`` job can't silently pass by having
+nothing to check.
+
+Stdlib-only (imports ``repro.obs.perf`` off ``src/`` directly, no jax).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.perf import detect_regressions, load_history  # noqa: E402
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--history-dir",
+                   default=str(Path(__file__).resolve().parent / "history"),
+                   help="directory of <bench>.jsonl trajectories")
+    p.add_argument("--bench", action="append", default=None,
+                   help="restrict to these bench names (repeatable)")
+    p.add_argument("--window", type=int, default=5,
+                   help="baseline = median of the last K same-env runs")
+    p.add_argument("--rel-threshold", type=float, default=0.5,
+                   help="relative slack floor (0.5 = flag only >1.5x baseline)")
+    p.add_argument("--k-mad", type=float, default=5.0,
+                   help="noise slack: k x MAD of the baseline pool")
+    p.add_argument("--strict", action="store_true",
+                   help="also fail on missing/empty/corrupt history")
+    p.add_argument("--json", action="store_true",
+                   help="machine-readable report on stdout")
+    args = p.parse_args(argv)
+
+    history_dir = Path(args.history_dir)
+    wanted = set(args.bench) if args.bench else None
+    problems: list[str] = []
+    regressions = []
+    checked = 0
+
+    paths = sorted(history_dir.glob("*.jsonl")) if history_dir.is_dir() else []
+    if wanted is not None:
+        paths = [p_ for p_ in paths if p_.stem in wanted]
+        missing = wanted - {p_.stem for p_ in paths}
+        if missing:
+            problems.append(f"no history for bench(es): {', '.join(sorted(missing))}")
+    if not paths:
+        problems.append(f"no trajectories under {history_dir}")
+
+    for path in paths:
+        try:
+            records = load_history(path)
+        except ValueError as e:
+            problems.append(str(e))
+            continue
+        if not records:
+            problems.append(f"{path}: empty trajectory")
+            continue
+        checked += 1
+        regressions.extend(detect_regressions(
+            records, bench=path.stem, window=args.window,
+            rel_threshold=args.rel_threshold, k_mad=args.k_mad,
+        ))
+
+    if args.json:
+        print(json.dumps({
+            "checked": checked,
+            "regressions": [vars(r) | {"ratio": r.ratio} for r in regressions],
+            "problems": problems,
+        }, indent=1, sort_keys=True))
+    else:
+        for r in regressions:
+            print(f"REGRESSION  {r.describe()}")
+        for msg in problems:
+            print(f"{'PROBLEM' if args.strict else 'WARNING'}  {msg}")
+        print(f"checked {checked} trajectorie(s): "
+              f"{len(regressions)} regression(s)"
+              + (f", {len(problems)} problem(s)" if problems else ""))
+
+    if regressions:
+        return 1
+    if args.strict and problems:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

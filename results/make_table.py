@@ -26,6 +26,13 @@ from pathlib import Path
 
 RESULTS_DIR = Path(__file__).resolve().parent
 
+# repro.obs.perf is deliberately stdlib-only (and src/repro is a namespace
+# package with no jax-importing __init__), so the docs job can read the
+# bench trajectory without a jax install.
+sys.path.insert(0, str(RESULTS_DIR.parent / "src"))
+
+from repro.obs.perf import baseline_pool, load_history  # noqa: E402
+
 
 # ---------------------------------------------------------------------------
 # roofline table (dryrun JSONs)
@@ -71,6 +78,22 @@ def _ms(x) -> str:
     return f"{x:.3f}"
 
 
+def _cost_cells(e: dict) -> str:
+    """The two roofline columns (compiled-HLO MiB, achieved roofline
+    fraction) of a tuned-sweep entry; em-dashes for pre-PR-8 artifacts.
+
+    Tree kernels are compare/gather programs — the FLOP counter
+    (dot/convolution only) reads ~0 for them, so the byte side carries the
+    signal and the fraction is the memory-roofline one.  Peaks are TPU v5e
+    (`launch/roofline.py`); on interpret-mode CPU artifacts the absolute
+    fraction is tiny by construction and only the trend is meaningful.
+    """
+    b, frac = e.get("bytes"), e.get("roofline_frac")
+    mib = f"{b / 2**20:.2f}" if isinstance(b, (int, float)) else "—"
+    fr = f"{frac:.2e}" if isinstance(frac, (int, float)) else "—"
+    return f" {mib} | {fr} |"
+
+
 def _env_note(data: dict) -> list[str]:
     """Render the ``env`` header benchmarks/common.py stamps into each JSON."""
     env = data.get("env")
@@ -95,8 +118,8 @@ def render_tree_eval(data: dict) -> str:
     out.append("### Per-tree: tuned dispatch vs every fixed variant")
     out.append("")
     out.append("| workload | M | N | A | d | best variant | best fixed ms "
-               "| tuned ms | tuned/best | within noise |")
-    out.append("|" + "---|" * 10)
+               "| tuned ms | tuned/best | within noise | HLO MiB | roofline |")
+    out.append("|" + "---|" * 12)
     for e in data.get("entries", []):
         s = e["shape"]
         out.append(
@@ -105,6 +128,7 @@ def render_tree_eval(data: dict) -> str:
             f"| {_ms(e['best_fixed_interleaved_ms'])} | {_ms(e['tuned_ms'])} "
             f"| {e['tuned_vs_best_fixed']:.3f} "
             f"| {'yes' if e['tuned_within_noise_of_best'] else 'NO'} |"
+            + _cost_cells(e)
         )
     out.append("")
     out.append("Per-variant best medians (min over each variant's parameter grid):")
@@ -123,8 +147,9 @@ def render_tree_eval(data: dict) -> str:
                    "— per (T, M, N_max, A, depth-profile) bucket.")
         out.append("")
         out.append("| workload | T | M | depth profile | winning candidate "
-                   "| forest tuned ms | per-tree ms | tuned/per-tree | not worse |")
-        out.append("|" + "---|" * 9)
+                   "| forest tuned ms | per-tree ms | tuned/per-tree | not worse "
+                   "| HLO MiB | roofline |")
+        out.append("|" + "---|" * 11)
         for e in forest:
             s = e["shape"]
             out.append(
@@ -134,6 +159,7 @@ def render_tree_eval(data: dict) -> str:
                 f"| {_ms(e['forest_tuned_ms'])} | {_ms(e['per_tree_ms'])} "
                 f"| {e['forest_tuned_vs_per_tree']:.3f} "
                 f"| {'yes' if e['forest_tuned_not_worse'] else 'NO'} |"
+                + _cost_cells(e)
             )
         out.append("")
         out.append("Per-candidate best medians:")
@@ -262,11 +288,14 @@ def render_obs(data: dict) -> str:
                "null tracer), metrics only, and metrics + span tracing.  "
                "Acceptance: metrics-enabled within 2% of disabled.")
     out.append("")
-    out.append("| mode | median ms | mean ms | min ms | max ms |")
-    out.append("|" + "---|" * 5)
+    out.append("| mode | median ms | MAD ms | mean ms | min ms | max ms |")
+    out.append("|" + "---|" * 6)
     for e in data.get("entries", []):
+        mad = e.get("mad_ms")
         out.append(
-            f"| {e['name']} | {_ms(e['median_ms'])} | {_ms(e['mean_ms'])} "
+            f"| {e['name']} | {_ms(e['median_ms'])} "
+            f"| {_ms(mad) if isinstance(mad, (int, float)) else '—'} "
+            f"| {_ms(e['mean_ms'])} "
             f"| {_ms(e['min_ms'])} | {_ms(e['max_ms'])} |"
         )
     s = data.get("summary", {})
@@ -281,6 +310,57 @@ def render_obs(data: dict) -> str:
             "path measured no slower than the disabled one."
         )
     return "\n".join(out)
+
+
+def render_trajectory(history_dir: Path) -> str:
+    """results/history/*.jsonl → per-workload trajectory deltas.
+
+    For every series: run count, baseline (median of the last 5
+    same-environment prior runs — the same pool
+    ``results/check_regressions.py`` gates on), latest median, and Δ%.
+    Series whose latest run has no comparable predecessor (seed-only
+    trajectories, env changes) show an em-dash delta.
+    """
+    import statistics
+
+    out = ["## Bench trajectory (`results/history/*.jsonl`)", ""]
+    out.append("Every bench run appends its medians here "
+               "(`benchmarks/common.py`); the regression gate "
+               "(`results/check_regressions.py`, CI `perf-gate`) compares "
+               "the latest run against the median of the last 5 "
+               "same-environment runs.  Δ% is latest vs that baseline — "
+               "positive = slower.")
+    out.append("")
+    found = False
+    for path in sorted(history_dir.glob("*.jsonl")):
+        records = load_history(path)
+        if not records:
+            continue
+        found = True
+        latest = records[-1]
+        pool = baseline_pool(records, window=5)
+        out.append(f"### `{path.stem}` — {len(records)} run(s)")
+        out.append("")
+        out.append("| series | runs | baseline ms | latest ms | Δ% |")
+        out.append("|" + "---|" * 5)
+        for name, s in sorted((latest.get("series") or {}).items()):
+            base_vals = [float(r["series"][name]["median_ms"]) for r in pool
+                         if name in (r.get("series") or {})]
+            n_runs = 1 + sum(1 for r in records[:-1]
+                             if name in (r.get("series") or {}))
+            latest_ms = float(s["median_ms"])
+            if base_vals:
+                base = statistics.median(base_vals)
+                delta = f"{(latest_ms - base) / base * 100.0:+.1f}%" if base else "—"
+                base_s = _ms(base)
+            else:
+                base_s, delta = "—", "—"
+            out.append(f"| {name} | {n_runs} | {base_s} | {_ms(latest_ms)} | {delta} |")
+        out.append("")
+    if not found:
+        out.append("*(no trajectories yet — run any bench to start one)*")
+        out.append("")
+    return "\n".join(out).rstrip()
 
 
 _RENDERERS = {
@@ -322,6 +402,10 @@ def render_benchmarks(results_dir: Path = RESULTS_DIR) -> str:
         out.append("")
     if not found:
         out.append("*(no results/BENCH_*.json files found)*")
+        out.append("")
+    history = results_dir / "history"
+    if history.is_dir():
+        out.append(render_trajectory(history))
         out.append("")
     return "\n".join(out).rstrip() + "\n"
 

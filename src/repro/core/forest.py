@@ -152,6 +152,8 @@ def eval_forest_cascade(
     calibration=None,
     engine: str | None = None,
     deadline_ms: float | None = None,
+    registry=None,
+    tracer=None,
 ):
     """Staged early-exit majority vote — the forest-scale dual of speculation.
 
@@ -165,6 +167,10 @@ def eval_forest_cascade(
 
     Returns a :class:`repro.kernels.tree_eval.CascadeResult` — classes plus
     per-record margin, trees evaluated, exit stage and confidence.
+
+    ``registry=`` / ``tracer=`` thread through to the evaluator so the
+    host-side compaction between stages (``cascade.compact_ms`` /
+    ``cascade.compact`` spans) lands in the caller's trace.
     """
     from repro.kernels.tree_eval import eval_cascade
 
@@ -178,6 +184,8 @@ def eval_forest_cascade(
         calibration=calibration,
         engine=engine,
         deadline_ms=deadline_ms,
+        registry=registry,
+        tracer=tracer,
     )
 
 

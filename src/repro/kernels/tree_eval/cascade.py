@@ -363,6 +363,10 @@ class CascadeEvaluator:
         self.m_exit_margin = r.histogram(
             "cascade.exit_margin", "final top-1 minus top-2 vote margins",
             boundaries=_MARGIN_BOUNDARIES)
+        self.m_compact_ms = r.histogram(
+            "cascade.compact_ms",
+            "host-side survivor compaction per stage (gather + scatter + exit test)",
+            ("stage",))
 
     # -- stage construction -------------------------------------------------
 
@@ -473,19 +477,32 @@ class CascadeEvaluator:
                         break
                 survivors.append(int(alive.size))
                 self.m_survival.labels(stage=s).observe(alive.size / max(m, 1))
-                stage_votes, _ = self._stage_votes(s, rec[alive])
-                votes[alive] += stage_votes
-                trees_evaluated[alive] += size
-                stages_run = s + 1
-                remaining = t_total - int(trees_evaluated[alive[0]]) if alive.size else 0
-                if self.bound is not None and remaining > 0:
-                    va = votes[alive]
-                    top2 = np.partition(va, -2, axis=1)[:, -2:]
-                    margin = top2[:, 1] - top2[:, 0]
-                    decided = margin > self.bound * remaining
-                    if decided.any():
-                        exit_stage[alive[decided]] = s
-                        alive = alive[~decided]
+                # Survivor compaction is host numpy today (see ROADMAP: a
+                # Pallas prefix-scan would keep it on-device) — time both
+                # halves so it stops being invisible next to the kernels.
+                c0 = time.perf_counter()
+                with self.tracer.span("cascade.compact", cat="cascade", stage=s,
+                                      phase="gather", survivors=int(alive.size)):
+                    stage_rec = rec[alive]
+                compact_ms = (time.perf_counter() - c0) * 1e3
+                stage_votes, _ = self._stage_votes(s, stage_rec)
+                c1 = time.perf_counter()
+                with self.tracer.span("cascade.compact", cat="cascade", stage=s,
+                                      phase="scatter", survivors=int(alive.size)):
+                    votes[alive] += stage_votes
+                    trees_evaluated[alive] += size
+                    stages_run = s + 1
+                    remaining = t_total - int(trees_evaluated[alive[0]]) if alive.size else 0
+                    if self.bound is not None and remaining > 0:
+                        va = votes[alive]
+                        top2 = np.partition(va, -2, axis=1)[:, -2:]
+                        margin = top2[:, 1] - top2[:, 0]
+                        decided = margin > self.bound * remaining
+                        if decided.any():
+                            exit_stage[alive[decided]] = s
+                            alive = alive[~decided]
+                compact_ms += (time.perf_counter() - c1) * 1e3
+                self.m_compact_ms.labels(stage=s).observe(compact_ms)
             espan.set(stages_run=stages_run)
 
         classes = votes.argmax(axis=1).astype(np.int32)
@@ -524,6 +541,8 @@ def eval_cascade(
     jump_mode: str = "gather",
     block_m: int | None = None,
     deadline_ms: float | None = None,
+    registry: "obs.Registry | None" = None,
+    tracer: "obs.Tracer | None" = None,
 ) -> CascadeResult:
     """One-shot cascade evaluation (builds a :class:`CascadeEvaluator`).
 
@@ -541,6 +560,8 @@ def eval_cascade(
         block_m=block_m,
         stages=stages,
         calibration=calibration if calibration is not None else records,
+        registry=registry,
+        tracer=tracer,
     )
     return ev(records, deadline_ms=deadline_ms)
 

@@ -11,6 +11,12 @@ autotuner, the dist executor + streaming chunker, the early-exit cascade):
               and optional ``jax.profiler.TraceAnnotation`` bridging so
               host spans line up with device profiles.
   export.py   JSON snapshot + Prometheus text exposition, stdlib-only.
+  perf.py     bench trajectory store (``results/history/<bench>.jsonl``)
+              and the noise-aware perf-regression detector behind the CI
+              ``perf-gate`` job; stdlib-only.
+  flight.py   SLO flight recorder for the serve engines — bounded ring of
+              recent waves, breach counters, crash-dump bundles (metrics
+              snapshot + Perfetto trace) on breach/exception/demand.
   smoke.py    the CI ``obs`` job: serve a workload with tracing on, export
               both formats, assert they parse and carry the core metrics.
 
@@ -27,6 +33,7 @@ convention.
 """
 
 from repro.obs.export import prometheus_text, snapshot, write_json_snapshot
+from repro.obs.flight import FlightPolicy, FlightRecorder
 from repro.obs.metrics import (
     DEFAULT_MS_BOUNDARIES,
     DEFAULT_RATIO_BOUNDARIES,
@@ -38,6 +45,13 @@ from repro.obs.metrics import (
     default_registry,
     set_default_registry,
 )
+from repro.obs.perf import (
+    Regression,
+    append_history,
+    detect_regressions,
+    extract_series,
+    load_history,
+)
 from repro.obs.trace import NULL_TRACER, SpanEvent, Tracer, write_chrome_trace
 
 __all__ = [
@@ -45,13 +59,20 @@ __all__ = [
     "DEFAULT_MS_BOUNDARIES",
     "DEFAULT_RATIO_BOUNDARIES",
     "DuplicateMetricError",
+    "FlightPolicy",
+    "FlightRecorder",
     "Gauge",
     "Histogram",
     "NULL_TRACER",
     "Registry",
+    "Regression",
     "SpanEvent",
     "Tracer",
+    "append_history",
     "default_registry",
+    "detect_regressions",
+    "extract_series",
+    "load_history",
     "prometheus_text",
     "set_default_registry",
     "snapshot",

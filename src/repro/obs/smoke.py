@@ -10,7 +10,10 @@ Prometheus text snapshot, then assert that
 * the Prometheus text parses line-by-line and names the core series
   (wave latency, chunker throughput/overlap, tuner resolutions);
 * registering a conflicting duplicate metric raises
-  :class:`repro.obs.DuplicateMetricError`.
+  :class:`repro.obs.DuplicateMetricError`;
+* a serve pass under an unmeetable SLO trips the flight recorder — breach
+  counters land in the registry and the dumped bundle (``flight.json`` +
+  Perfetto ``trace.json``) parses.
 
 Artifacts land in ``--out`` (default ``/tmp/repro_obs_smoke``) so the CI
 job can upload them.  Exit code 0 means every assertion passed.
@@ -66,7 +69,7 @@ def _forest(seed: int = 0):
     return EncodedForest(trees), data
 
 
-def _serve_traced(registry, tracer):
+def _serve_traced(registry, tracer, flight=None):
     import numpy as np
 
     from repro.serve import ForestServeEngine, TreeRequest
@@ -77,11 +80,37 @@ def _serve_traced(registry, tracer):
     eng = ForestServeEngine(
         forest, max_batch=WAVE_RECORDS, chunk_records=WAVE_RECORDS // 4,
         n_classes=N_CLASSES, retune=None, registry=registry, tracer=tracer,
+        flight=flight,
     )
     reqs = [TreeRequest(uid=i, records=rec) for i in range(REQUESTS)]
     out = eng.run(reqs)
     assert len(out) == REQUESTS, f"served {len(out)}/{REQUESTS} requests"
     return eng
+
+
+def check_flight_bundle(out_dir: Path) -> None:
+    """A breach-forced serve pass must dump a loadable flight bundle."""
+    from repro import obs
+
+    registry, tracer = obs.Registry(), obs.Tracer()
+    policy = obs.FlightPolicy(slo_ms=1e-6, out_dir=str(out_dir),
+                              min_dump_interval_s=0.0)
+    eng = _serve_traced(registry, tracer, flight=policy)
+    snap = obs.snapshot(registry)
+    breach_series = [k for k in snap["counters"] if k.startswith("flight.slo_breaches")]
+    assert breach_series and all(snap["counters"][k] > 0 for k in breach_series), \
+        f"no SLO breaches counted under a {policy.slo_ms} ms SLO"
+    bundles = sorted(out_dir.glob("flight-forest-*"))
+    assert bundles, "no flight bundle dumped on breach"
+    bundle = bundles[-1]
+    flight = json.loads((bundle / "flight.json").read_text())
+    assert flight["reason"] == "slo_breach" and flight["waves"], \
+        "flight.json missing reason/waves"
+    trace = json.loads((bundle / "trace.json").read_text())
+    assert trace.get("traceEvents"), "flight trace.json has no traceEvents"
+    _ = eng.dump_flight("smoke")  # the explicit path must work too
+    print(f"flight recorder ok: {len(bundles)} bundle(s), "
+          f"{len(flight['waves'])} waves in ring, breaches counted")
 
 
 def check_chrome_trace(path: Path) -> None:
@@ -168,6 +197,7 @@ def main(argv=None) -> int:
     check_prometheus(prom_path)
     json.loads(snap_path.read_text())  # snapshot must round-trip
     check_duplicate_registration(registry)
+    check_flight_bundle(out / "flight")
     print(f"artifacts in {out}")
     return 0
 

@@ -33,6 +33,17 @@ from repro import obs
 _STAGE_BOUNDARIES = tuple(float(i) for i in range(1, 9))
 
 
+def _make_flight(flight, registry, tracer, engine: str):
+    """Coerce the ``flight=`` argument (policy or ready recorder) into a
+    :class:`repro.obs.FlightRecorder` sharing the engine's registry/tracer."""
+    if flight is None:
+        return None
+    if isinstance(flight, obs.FlightRecorder):
+        return flight
+    return obs.FlightRecorder(flight, registry=registry, tracer=tracer,
+                              engine=engine)
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -424,7 +435,8 @@ class TreeServeEngine:
                  autotune: bool = False, engines=None,
                  retune: RetunePolicy | None = RetunePolicy(),
                  registry: obs.Registry | None = None,
-                 tracer: obs.Tracer | None = None):
+                 tracer: obs.Tracer | None = None,
+                 flight: "obs.FlightPolicy | obs.FlightRecorder | None" = None):
         from repro.tune.dispatch import TunedEvaluator
         from repro.tune.measure import tune_workload
         from repro.tune.space import Candidate, WorkloadShape
@@ -432,6 +444,7 @@ class TreeServeEngine:
         self._shape_of = WorkloadShape.of
         self.obs = registry if registry is not None else obs.Registry()
         self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+        self.flight = _make_flight(flight, self.obs, self.tracer, "tree")
         self._eval = TunedEvaluator(
             tree, cache=cache, autotune=autotune, engines=engines,
             registry=self.obs, tracer=self.tracer,
@@ -486,11 +499,19 @@ class TreeServeEngine:
         with self.tracer.span("serve.wave", cat="serve", engine="tree",
                               requests=len(wave), records=total, bucket=key):
             t0 = time.perf_counter()
-            with self.tracer.span("kernel.dispatch", cat="kernel", bucket=key):
-                out = np.asarray(jax.block_until_ready(self._eval(batch)))
+            try:
+                with self.tracer.span("kernel.dispatch", cat="kernel", bucket=key):
+                    out = np.asarray(jax.block_until_ready(self._eval(batch)))
+            except BaseException as exc:
+                if self.flight is not None:
+                    self.flight.note_exception(exc)
+                raise
             dt = time.perf_counter() - t0
         self.stats.m_eval_s.inc(dt)
         self.stats.wave_ms(key).observe(dt * 1e3)
+        if self.flight is not None:
+            self.flight.note_wave(latency_ms=dt * 1e3, bucket=key,
+                                  records=total, requests=len(wave))
         off = 0
         for r in wave:
             m = r.records.shape[0]
@@ -500,6 +521,15 @@ class TreeServeEngine:
         self.stats.note_bucket_wave(key)
         if self.retuner is not None:
             self.retuner.note(key, batch)
+
+    def dump_flight(self, reason: str = "manual"):
+        """Write a flight-recorder debug bundle now; returns its path.
+
+        Requires the engine to have been built with ``flight=``.
+        """
+        if self.flight is None:
+            raise RuntimeError("engine built without flight= recorder")
+        return self.flight.dump(reason)
 
 
 # ---------------------------------------------------------------------------
@@ -598,13 +628,15 @@ class ForestServeEngine:
                  retune: RetunePolicy | None = RetunePolicy(),
                  anytime: AnytimePolicy | None = None,
                  registry: obs.Registry | None = None,
-                 tracer: obs.Tracer | None = None):
+                 tracer: obs.Tracer | None = None,
+                 flight: "obs.FlightPolicy | obs.FlightRecorder | None" = None):
         from repro.dist import ShardedForestEvaluator, StreamingChunker
 
         if anytime is not None and n_classes is None:
             raise ValueError("anytime serving needs n_classes (it votes classes)")
         self.obs = registry if registry is not None else obs.Registry()
         self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+        self.flight = _make_flight(flight, self.obs, self.tracer, "forest")
         self._eval = ShardedForestEvaluator(
             forest, mesh=mesh, plan=plan, decomposition=decomposition,
             cache=cache, autotune=autotune, engines=engines,
@@ -675,6 +707,14 @@ class ForestServeEngine:
         return self._cascade
 
     def _run_wave(self, wave: list[TreeRequest], total: int) -> None:
+        try:
+            self._run_wave_inner(wave, total)
+        except BaseException as exc:
+            if self.flight is not None:
+                self.flight.note_exception(exc)
+            raise
+
+    def _run_wave_inner(self, wave: list[TreeRequest], total: int) -> None:
         t_wave = time.perf_counter()
         for r in wave:
             enq = getattr(r, "_t_enqueue", None)
@@ -750,5 +790,20 @@ class ForestServeEngine:
             wspan.set(bucket=key)
         self.stats.wave_ms(key).observe(dt * 1e3)
         self.stats.note_bucket_wave(key)
+        if self.flight is not None:
+            self.flight.note_wave(
+                latency_ms=dt * 1e3, bucket=key, records=total,
+                requests=len(wave),
+                mode="anytime" if self.anytime is not None else "stream",
+            )
         if self.retuner is not None:
             self.retuner.note(key, batch)
+
+    def dump_flight(self, reason: str = "manual"):
+        """Write a flight-recorder debug bundle now; returns its path.
+
+        Requires the engine to have been built with ``flight=``.
+        """
+        if self.flight is None:
+            raise RuntimeError("engine built without flight= recorder")
+        return self.flight.dump(reason)

@@ -40,10 +40,24 @@ class Measurement:
     candidate: Candidate
     median_ms: float
     samples_ms: tuple[float, ...]
+    # Static cost of the candidate's compiled HLO — ``{"flops", "bytes",
+    # "roofline_frac"}`` — or None when the candidate has no single compiled
+    # program (host-loop cascades) or lowering failed.  See
+    # :func:`candidate_cost`.
+    cost: dict | None = None
 
     @property
     def failed(self) -> bool:
         return not self.samples_ms
+
+    @property
+    def mad_ms(self) -> float:
+        """Median absolute deviation of the samples — the noise floor the
+        trajectory store records next to the median."""
+        if not self.samples_ms:
+            return 0.0
+        med = _median(self.samples_ms)
+        return _median([abs(s - med) for s in self.samples_ms])
 
 
 def _median(xs) -> float:
@@ -51,6 +65,48 @@ def _median(xs) -> float:
     n = len(xs)
     mid = n // 2
     return xs[mid] if n % 2 else (xs[mid - 1] + xs[mid]) / 2.0
+
+
+def roofline_fraction(flops: float, bytes_: float, median_ms: float) -> float:
+    """Achieved fraction of the hardware bound for one measured candidate.
+
+    ``max(flops/PEAK_FLOPS, bytes/HBM_BW)`` is the shortest time the chip
+    could possibly take (the roofline floor); dividing by the measured time
+    says how close the candidate got.  Peaks are the TPU v5e constants from
+    :mod:`repro.launch.roofline` — on the CPU interpret path the fraction is
+    honest but tiny (the point is the *trend* across candidates and PRs, not
+    the absolute value off-TPU).
+    """
+    from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+    if median_ms <= 0 or median_ms == float("inf"):
+        return 0.0
+    floor_s = max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
+    return floor_s / (median_ms / 1e3)
+
+
+def candidate_cost(fn, records, *, median_ms: float | None = None) -> dict | None:
+    """FLOPs / bytes / roofline fraction of ``fn(records)``'s compiled HLO.
+
+    Lowers ``jax.jit(fn)`` with ``records`` as a real argument (a zero-arg
+    closure would constant-fold the whole program to a literal) and runs the
+    trip-count-aware :func:`repro.utils.hlo_cost.analyze` over the compiled
+    text.  Tree kernels are compare/gather programs, so ``flops`` (dot/conv
+    only) is typically ~0 and ``bytes`` carries the signal — they are
+    memory-bound by construction.  Returns None when lowering or analysis
+    fails; cost is decoration, never a reason to fail a sweep.
+    """
+    from repro.utils.hlo_cost import analyze
+
+    try:
+        compiled = jax.jit(fn).lower(records).compile()
+        cost = analyze(compiled.as_text())
+    except Exception:
+        return None
+    out = {"flops": float(cost.flops), "bytes": float(cost.bytes)}
+    if median_ms is not None:
+        out["roofline_frac"] = roofline_fraction(cost.flops, cost.bytes, median_ms)
+    return out
 
 
 def _note_measurements(registry, level: str, measurements) -> None:
@@ -69,12 +125,27 @@ def _note_measurements(registry, level: str, measurements) -> None:
     ms = r.histogram(
         "tune.measure_ms", "per-candidate median measurement time",
         ("level",)).labels(level=level)
+    g_flops = r.gauge(
+        "tune.candidate_flops", "compiled-HLO FLOPs of the measured candidate",
+        ("level", "variant"))
+    g_bytes = r.gauge(
+        "tune.candidate_bytes", "compiled-HLO HBM bytes of the measured candidate",
+        ("level", "variant"))
+    g_roof = r.gauge(
+        "tune.roofline_frac",
+        "achieved fraction of the hardware roofline bound (see launch/roofline.py)",
+        ("level", "variant"))
     for m in measurements:
         measured.labels(level=level).inc()
         if m.failed:
             failed.labels(level=level).inc()
         else:
             ms.observe(m.median_ms)
+        if m.cost is not None:
+            v = m.candidate.variant
+            g_flops.labels(level=level, variant=v).set(m.cost["flops"])
+            g_bytes.labels(level=level, variant=v).set(m.cost["bytes"])
+            g_roof.labels(level=level, variant=v).set(m.cost.get("roofline_frac", 0.0))
 
 
 def time_callable(fn, *, warmup: int = 2, iters: int = 5) -> tuple[float, ...]:
@@ -185,14 +256,16 @@ def measure_candidate(
     spec = get_variant(candidate.variant)
     params = candidate.param_dict
 
-    def run():
-        return spec.fn(records, enc, max_depth=max_depth, **params)
+    def fn(rec):
+        return spec.fn(rec, enc, max_depth=max_depth, **params)
 
     try:
-        samples = time_callable(run, warmup=warmup, iters=iters)
+        samples = time_callable(lambda: fn(records), warmup=warmup, iters=iters)
     except Exception:
         return Measurement(candidate, float("inf"), ())
-    return Measurement(candidate, _median(samples), samples)
+    median = _median(samples)
+    return Measurement(candidate, median, samples,
+                       candidate_cost(fn, records, median_ms=median))
 
 
 def tune_workload(
@@ -255,10 +328,12 @@ def _forest_candidate_fn(
     candidate: Candidate, rec, forest, *, depth: int, cache, engines,
     autotune_trees: bool = False, measure_kw: dict | None = None,
 ):
-    """Build the timed callable for one forest candidate (warm state outside
-    the timed region: per-tree winners resolved — autotuned when
-    ``autotune_trees``, pricing the per-tree family at its tuned best —
-    and fused tables packed)."""
+    """Build the timed callable for one forest candidate as a one-argument
+    function of the record batch (warm state outside the timed region:
+    per-tree winners resolved — autotuned when ``autotune_trees``, pricing
+    the per-tree family at its tuned best — and fused tables packed).
+    Taking the batch as an argument keeps the same callable usable for
+    :func:`candidate_cost`, where a closed-over batch would constant-fold."""
     if candidate.variant == PER_TREE_FAMILY:
         from repro.tune.dispatch import TunedEvaluator  # local: avoid cycle
 
@@ -267,11 +342,16 @@ def _forest_candidate_fn(
                            autotune=autotune_trees, measure_kw=measure_kw)
             for i in range(forest.n_trees)
         ]
-        return lambda: jnp.stack([ev(rec) for ev in evs])
+        # Resolve every per-tree winner on the real batch before any jit
+        # trace sees the evaluators (resolution itself measures, which must
+        # not happen under a tracer).
+        for ev in evs:
+            ev(rec)
+        return lambda r: jnp.stack([ev(r) for ev in evs])
     spec = get_forest_variant(candidate.variant)
     params = candidate.param_dict
     target = PackedForest(forest, rec.shape[1]) if spec.family == "fused" else forest
-    return lambda: spec.fn(rec, target, max_depth=depth, **params)
+    return lambda r: spec.fn(r, target, max_depth=depth, **params)
 
 
 def measure_forest_candidate(
@@ -303,15 +383,17 @@ def measure_forest_candidate(
     """
     depth = max(int(forest.max_depth), 1)
     try:
-        run = _forest_candidate_fn(
+        fn = _forest_candidate_fn(
             candidate, records, forest, depth=depth, cache=cache, engines=engines,
             autotune_trees=autotune_trees,
             measure_kw={"warmup": warmup, "iters": iters},
         )
-        samples = time_callable(run, warmup=warmup, iters=iters)
+        samples = time_callable(lambda: fn(records), warmup=warmup, iters=iters)
     except Exception:
         return Measurement(candidate, float("inf"), ())
-    return Measurement(candidate, _median(samples), samples)
+    median = _median(samples)
+    return Measurement(candidate, median, samples,
+                       candidate_cost(fn, records, median_ms=median))
 
 
 def tune_forest_workload(
