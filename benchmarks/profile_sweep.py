@@ -1,0 +1,140 @@
+"""Traversal profiler sweep: shadow-pass cost + prior-vs-measured d_µ.
+
+The §3.6 cost model prices speculative evaluation with the *mean traversal
+depth* d_µ — N/d_µ is the fraction of speculated node evaluations wasted on
+records that already exited.  Until now dispatch estimated d_µ from tree
+geometry (a balanced-tree prior) or a blocking host descent; the
+:class:`repro.obs.TraversalProfiler` measures it from sampled shadow passes
+off the request path.  This bench prices that machinery and quantifies what
+the measurement buys:
+
+* serve-pass timings for the paper workload under three policies —
+  ``plain`` (profiling off), ``profiled_default`` (the shipped 1-in-64
+  async sampling), ``profiled_sync`` (every wave, inline: the worst case,
+  an upper bound no production policy pays);
+* per-bucket d_µ three ways — geometry prior, host-sampled descent,
+  profiler-measured — with the speculation-waste ratio N/d_µ each carries
+  into ``predicted_times``.
+
+Emits results/BENCH_profile.json (+ a ``profile`` history trajectory line).
+
+    PYTHONPATH=src python -m benchmarks.profile_sweep
+"""
+
+from __future__ import annotations
+
+WAVE_RECORDS = 2048
+REQUESTS = 4
+
+
+def main(iters: int = 20, warmup: int = 3) -> dict:
+    import numpy as np
+
+    from benchmarks.common import paper_workload, time_fn, write_bench_json
+    from repro import obs
+    from repro.core.analysis import (
+        mean_traversal_depth,
+        observed_depths,
+        speculation_waste_ratio,
+    )
+    from repro.serve import TreeRequest, TreeServeEngine
+    from repro.tune.heuristic import default_d_mu
+    from repro.tune.space import WorkloadShape
+
+    wl = paper_workload(n_records=WAVE_RECORDS * REQUESTS)
+    rec = wl.records[: WAVE_RECORDS * REQUESTS].astype(np.float32)
+    waves = [rec[i * WAVE_RECORDS:(i + 1) * WAVE_RECORDS] for i in range(REQUESTS)]
+    print(f"tree: N={wl.enc.n_nodes} depth={wl.depth}; "
+          f"{REQUESTS} requests x {WAVE_RECORDS} records per pass")
+
+    policies = {
+        "plain": None,
+        "profiled_default": obs.ProfilePolicy(),
+        "profiled_sync": obs.ProfilePolicy(sample_every=1, synchronous=True),
+    }
+    entries: list[dict] = []
+    medians: dict[str, float] = {}
+    sync_eng = None
+    for mode, policy in policies.items():
+        eng = TreeServeEngine(wl.enc, max_batch=WAVE_RECORDS, retune=None,
+                              profile=policy)
+
+        def serve_pass():
+            reqs = [TreeRequest(uid=i, records=w) for i, w in enumerate(waves)]
+            eng.run(reqs)
+
+        # prime: the first sampled wave jit-compiles the shadow descent on
+        # the worker thread; drain so the compile never bleeds into timing
+        serve_pass()
+        if eng.profiler is not None:
+            eng.profiler.drain()
+        t = time_fn(mode, serve_pass, iters=iters, warmup=warmup,
+                    mode=mode, requests=REQUESTS, wave_records=WAVE_RECORDS)
+        if eng.profiler is not None:
+            eng.profiler.drain()  # shadow passes out of the next mode's timing
+        medians[mode] = t.median_us / 1e3
+        print(f"  {mode:18s} median {t.median_us / 1e3:9.3f} ms "
+              f"(MAD {t.mad_us / 1e3:7.3f} ms)")
+        entries.append({
+            "name": mode,
+            "median_ms": t.median_us / 1e3,
+            "mad_ms": t.mad_us / 1e3,
+            "mean_ms": t.mean_us / 1e3,
+            "min_ms": t.min_us / 1e3,
+            "max_ms": t.max_us / 1e3,
+            "iters": t.n,
+        })
+        if mode == "profiled_sync":
+            sync_eng = eng
+
+    base = medians["plain"]
+    overhead = {m: (medians[m] - base) / base * 100.0
+                for m in ("profiled_default", "profiled_sync")}
+    for m, pct in overhead.items():
+        print(f"  {m:18s} overhead {pct:+6.2f}% vs plain")
+
+    # d_µ accounting per profiled bucket: what the heuristic would have
+    # assumed (geometry prior), what a blocking host descent sees, and what
+    # the shadow pass measured — plus the waste ratio N/d_µ each implies.
+    n = int(wl.enc.n_nodes)
+    shape = WorkloadShape.of(waves[0], wl.enc)
+    prior = default_d_mu(shape)
+    sampled = mean_traversal_depth(observed_depths(wl.enc, rec[:2048]))
+    buckets = []
+    for key in sorted(sync_eng.profiler.keys()):
+        p = sync_eng.profiler.profile(key)
+        buckets.append({
+            "bucket": key,
+            "samples": p.samples,
+            "d_mu_prior": prior,
+            "d_mu_sampled": float(sampled),
+            "d_mu_measured": p.d_mu,
+            "waste_prior": speculation_waste_ratio(n, prior),
+            "waste_sampled": speculation_waste_ratio(n, sampled),
+            "waste_measured": p.waste_ratio,
+            "level_active": [round(float(x), 4) for x in p.level_active],
+        })
+        print(f"  {key}: d_mu prior {prior:.2f} / sampled {sampled:.2f} / "
+              f"measured {p.d_mu:.2f}; waste N/d_mu "
+              f"{speculation_waste_ratio(n, prior):.2f} -> {p.waste_ratio:.2f}")
+
+    summary = {
+        "n_nodes": n,
+        "depth": int(wl.depth),
+        "default_overhead_pct": overhead["profiled_default"],
+        "sync_overhead_pct": overhead["profiled_sync"],
+        "buckets": buckets,
+    }
+    path = write_bench_json("profile", entries, summary=summary)
+    print(f"wrote {path}")
+    return summary
+
+
+if __name__ == "__main__":
+    import argparse
+
+    p = argparse.ArgumentParser(description="traversal profiler sweep")
+    p.add_argument("--iters", type=int, default=20)
+    p.add_argument("--warmup", type=int, default=3)
+    args = p.parse_args()
+    main(iters=args.iters, warmup=args.warmup)

@@ -25,7 +25,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.obs.perf import detect_regressions, load_history  # noqa: E402
+from repro.obs.perf import detect_regressions, load_history, skipped_series  # noqa: E402
 
 
 def main(argv=None) -> int:
@@ -41,6 +41,9 @@ def main(argv=None) -> int:
                    help="relative slack floor (0.5 = flag only >1.5x baseline)")
     p.add_argument("--k-mad", type=float, default=5.0,
                    help="noise slack: k x MAD of the baseline pool")
+    p.add_argument("--min-runs", type=int, default=2,
+                   help="series with fewer same-env baseline runs are "
+                        "reported as skipped, not silently passed")
     p.add_argument("--strict", action="store_true",
                    help="also fail on missing/empty/corrupt history")
     p.add_argument("--json", action="store_true",
@@ -51,6 +54,7 @@ def main(argv=None) -> int:
     wanted = set(args.bench) if args.bench else None
     problems: list[str] = []
     regressions = []
+    skipped: list[dict] = []
     checked = 0
 
     paths = sorted(history_dir.glob("*.jsonl")) if history_dir.is_dir() else []
@@ -76,20 +80,30 @@ def main(argv=None) -> int:
             records, bench=path.stem, window=args.window,
             rel_threshold=args.rel_threshold, k_mad=args.k_mad,
         ))
+        skipped.extend(
+            {"bench": path.stem, "series": name, "n_baseline": n}
+            for name, n in skipped_series(
+                records, window=args.window, min_runs=args.min_runs)
+        )
 
     if args.json:
         print(json.dumps({
             "checked": checked,
             "regressions": [vars(r) | {"ratio": r.ratio} for r in regressions],
+            "skipped": skipped,
             "problems": problems,
         }, indent=1, sort_keys=True))
     else:
         for r in regressions:
             print(f"REGRESSION  {r.describe()}")
+        for s in skipped:
+            print(f"SKIPPED  {s['bench']}/{s['series']}: insufficient history "
+                  f"({s['n_baseline']} same-env run(s), need {args.min_runs})")
         for msg in problems:
             print(f"{'PROBLEM' if args.strict else 'WARNING'}  {msg}")
         print(f"checked {checked} trajectorie(s): "
               f"{len(regressions)} regression(s)"
+              + (f", {len(skipped)} skipped" if skipped else "")
               + (f", {len(problems)} problem(s)" if problems else ""))
 
     if regressions:

@@ -95,6 +95,31 @@ def mean_traversal_depth(depths: np.ndarray) -> float:
     return float(np.asarray(depths).mean())
 
 
+def speculation_waste_ratio(n_nodes: float, d_mu: float) -> float:
+    """§3.6 speculative waste: node evaluations per record, all-N vs d_µ.
+
+    Procedure 5 evaluates every one of the ``N`` nodes for each record where
+    the divergent descent touches only ``d_µ`` on average — the ratio
+    ``N / d_µ`` is the work multiplier speculation pays for its shallower
+    critical path.  Measured d_µ (from the traversal profiler) makes this
+    the *observed* waste rather than the geometry-prior estimate.
+    """
+    return float(n_nodes) / max(float(d_mu), 1.0)
+
+
+def level_active_fractions(depths: np.ndarray, max_depth: int) -> np.ndarray:
+    """Fraction of records still descending when entering each round.
+
+    ``out[l] = mean(depth > l)`` for ``l in range(max_depth)`` — the
+    active-lane occupancy the paper's SIMD analysis charges idle processors
+    for at every level below a record's exit depth.
+    """
+    depths = np.asarray(depths)
+    return np.array(
+        [float((depths > l).mean()) for l in range(int(max_depth))], np.float64
+    )
+
+
 def observed_depths(enc, records) -> np.ndarray:
     """Per-record traversal depth under the branchless descent (host)."""
     from repro.core.tree import BOTTOM

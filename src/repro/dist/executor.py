@@ -105,6 +105,7 @@ class ShardedForestEvaluator:
         engines: tuple[str, ...] | None = None,
         registry: obs.Registry | None = None,
         tracer: obs.Tracer | None = None,
+        profiler=None,
     ):
         from repro.tune import TuneCache
 
@@ -114,6 +115,9 @@ class ShardedForestEvaluator:
         self.engines = engines
         self.obs = registry if registry is not None else obs.Registry()
         self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+        # a TraversalProfiler (serve engine's): measured per-bucket d_µ /
+        # survival flow into the forest evaluator's heuristic resolutions
+        self.profiler = profiler
         self.mesh_cost = mesh_cost if mesh_cost is not None else MeshCostModel()
         self.decomposition = decomposition
         self._given_mesh = mesh
@@ -187,6 +191,7 @@ class ShardedForestEvaluator:
                 engines=self.engines,
                 registry=self.obs,
                 tracer=self.tracer,
+                profiler=self.profiler,
             )
         return self._forest_ev
 

@@ -1,0 +1,169 @@
+"""Profiling evaluation path: the branchless descent with its eyes open.
+
+Every evaluator in this repo answers *what class*; this module answers the
+§3.6 questions the autotuner's cost model runs on — *how deep* did live
+traffic actually traverse (d_µ), *how divergent* was each round (the
+active-lane fraction the paper's SIMD analysis charges idle processors
+for), and *where* did records land (per-node / per-leaf hit counts, the
+input to the drift detector in :mod:`repro.obs.prof`).
+
+The descent mirrors :func:`repro.kernels.tree_eval.ref.tree_eval_ref`
+step for step — ``idx = child[idx] + (r_a > t)`` for ``max_depth`` rounds,
+leaves self-looping — with device-side reductions bolted on:
+
+* ``exit_depth[r]``  — rounds record ``r`` spent at internal nodes before
+  reaching its leaf (its traversal depth; mean = measured d_µ);
+* ``level_active[l]`` — fraction of records still at an internal node
+  entering round ``l`` (the paper's per-level lane occupancy);
+* ``node_hits[i]``   — internal-node evaluations at node ``i``;
+* ``leaf_hits[i]``   — records terminating at leaf ``i`` (the windowed
+  histogram the drift detector compares).
+
+Because the index arithmetic is byte-identical to the reference loop, the
+``classes`` output is *bit-exact* with the unprofiled evaluators — the
+shadow pass can double-check the serving path while it measures it.
+
+Runs as plain jitted jnp (scatter-adds + means), not a Pallas kernel: the
+shadow pass is sampled and off the request path, so portability (interpret
+-mode CPU in CI, any backend in prod) beats peak throughput here.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import BOTTOM, tree_depth
+
+__all__ = ["ForestProfile", "TreeProfile", "profile_forest_eval", "profile_tree_eval"]
+
+
+class TreeProfile(NamedTuple):
+    """One profiled descent over a record batch (device arrays).
+
+    ``classes`` is bit-exact with ``tree_eval_ref`` on the same inputs; the
+    rest are the measurements.  ``level_active[l]`` is the fraction of
+    records still at an internal node *entering* round ``l`` — equivalently
+    ``mean(exit_depth > l)``.
+    """
+
+    classes: jax.Array      # (M,) int32
+    exit_depth: jax.Array   # (M,) int32 — traversal depth per record
+    level_active: jax.Array  # (max_depth,) float32 — active-lane fraction
+    node_hits: jax.Array    # (N,) int32 — internal evaluations per node
+    leaf_hits: jax.Array    # (N,) int32 — terminal records per leaf
+
+    def d_mu(self) -> float:
+        """Measured mean traversal depth (the §3.6 d_µ)."""
+        return float(jnp.mean(self.exit_depth.astype(jnp.float32)))
+
+
+class ForestProfile(NamedTuple):
+    """Per-tree profiles of one forest descent (leading tree axis T)."""
+
+    classes: jax.Array      # (T, M) int32 — bit-exact with forest_eval_ref
+    exit_depth: jax.Array   # (T, M) int32
+    level_active: jax.Array  # (T, max_depth) float32
+    node_hits: jax.Array    # (T, N) int32
+    leaf_hits: jax.Array    # (T, N) int32
+
+    def d_mu(self) -> float:
+        """Forest d_µ: mean traversal depth over all trees × records."""
+        return float(jnp.mean(self.exit_depth.astype(jnp.float32)))
+
+    def leaf_histogram(self) -> np.ndarray:
+        """Leaf-hit counts summed over trees, (N,) — the drift signal."""
+        return np.asarray(jnp.sum(self.leaf_hits, axis=0))
+
+    def mean_level_active(self) -> np.ndarray:
+        """Active-lane fraction per round averaged over trees, (max_depth,)."""
+        return np.asarray(jnp.mean(self.level_active, axis=0))
+
+
+def _profiled_descent(records, attr_idx, threshold, child, class_val, max_depth):
+    """The reference loop with reductions; index math identical to ref.py."""
+    m = records.shape[0]
+    n = attr_idx.shape[0]
+    idx = jnp.zeros((m,), jnp.int32)
+    exit_depth = jnp.zeros((m,), jnp.int32)
+    node_hits = jnp.zeros((n,), jnp.int32)
+    active = []
+    for _ in range(max_depth):
+        internal = class_val[idx] == BOTTOM   # still descending this round
+        live = internal.astype(jnp.int32)
+        active.append(jnp.mean(internal.astype(jnp.float32)))
+        node_hits = node_hits.at[idx].add(live)
+        a = attr_idx[idx]
+        t = threshold[idx]
+        v = jnp.take_along_axis(records, a[:, None], axis=1)[:, 0]
+        idx = child[idx] + (v > t).astype(jnp.int32)
+        exit_depth = exit_depth + live
+    classes = class_val[idx]
+    leaf_hits = jnp.zeros((n,), jnp.int32).at[idx].add(1)
+    return classes, exit_depth, jnp.stack(active), node_hits, leaf_hits
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def _profile_tree(records, attr_idx, threshold, child, class_val, *, max_depth):
+    return _profiled_descent(records, attr_idx, threshold, child, class_val, max_depth)
+
+
+@functools.partial(jax.jit, static_argnames=("max_depth",))
+def _profile_forest(records, attr_idx, threshold, child, class_val, *, max_depth):
+    def one(a, t, c, k):
+        return _profiled_descent(records, a, t, c, k, max_depth)
+
+    return jax.vmap(one)(attr_idx, threshold, child, class_val)
+
+
+def profile_tree_eval(records, enc, *, max_depth: int | None = None) -> TreeProfile:
+    """Profile one tree's descent over a record batch.
+
+    Args:
+      records: (M, A) float array (compared in f32, like every evaluator).
+      enc: an :class:`repro.core.tree.EncodedTree`.
+      max_depth: descent rounds; default = the tree's depth (leaves
+        self-loop, so extra rounds change nothing but waste time).
+
+    Returns:
+      A :class:`TreeProfile`; ``classes`` is bit-exact with
+      :func:`repro.kernels.tree_eval.ref.tree_eval_ref`.
+    """
+    records = jnp.asarray(records, jnp.float32)
+    if max_depth is None:
+        max_depth = max(tree_depth(enc), 1)
+    out = _profile_tree(
+        records,
+        jnp.asarray(enc.attr_idx, jnp.int32),
+        jnp.asarray(enc.threshold, jnp.float32),
+        jnp.asarray(enc.child, jnp.int32),
+        jnp.asarray(enc.class_val, jnp.int32),
+        max_depth=int(max_depth),
+    )
+    return TreeProfile(*out)
+
+
+def profile_forest_eval(records, forest, *, max_depth: int | None = None) -> ForestProfile:
+    """Profile every tree of an :class:`~repro.core.forest.EncodedForest`.
+
+    Same contract as :func:`profile_tree_eval` lifted over the stacked
+    (T, N) tree tables; ``classes`` is bit-exact with
+    :func:`repro.kernels.tree_eval.ref.forest_eval_ref` (and therefore with
+    every tuned forest family).
+    """
+    records = jnp.asarray(records, jnp.float32)
+    if max_depth is None:
+        max_depth = max(int(forest.max_depth), 1)
+    out = _profile_forest(
+        records,
+        jnp.asarray(forest.attr_idx, jnp.int32),
+        jnp.asarray(forest.threshold, jnp.float32),
+        jnp.asarray(forest.child, jnp.int32),
+        jnp.asarray(forest.class_val, jnp.int32),
+        max_depth=int(max_depth),
+    )
+    return ForestProfile(*out)

@@ -17,6 +17,10 @@ autotuner, the dist executor + streaming chunker, the early-exit cascade):
   flight.py   SLO flight recorder for the serve engines — bounded ring of
               recent waves, breach counters, crash-dump bundles (metrics
               snapshot + Perfetto trace) on breach/exception/demand.
+  prof.py     traversal profiler — sampled shadow passes over the live
+              workload measuring §3.6's d_µ / speculation waste / lane
+              occupancy / leaf-hit drift, feeding the tuner and cascade
+              planner measured values instead of priors.
   smoke.py    the CI ``obs`` job: serve a workload with tracing on, export
               both formats, assert they parse and carry the core metrics.
 
@@ -52,9 +56,17 @@ from repro.obs.perf import (
     extract_series,
     load_history,
 )
+from repro.obs.prof import (
+    BucketProfile,
+    ProfilePolicy,
+    TraversalProfiler,
+    leaf_drift_distance,
+    survival_from_classes,
+)
 from repro.obs.trace import NULL_TRACER, SpanEvent, Tracer, write_chrome_trace
 
 __all__ = [
+    "BucketProfile",
     "Counter",
     "DEFAULT_MS_BOUNDARIES",
     "DEFAULT_RATIO_BOUNDARIES",
@@ -64,18 +76,22 @@ __all__ = [
     "Gauge",
     "Histogram",
     "NULL_TRACER",
+    "ProfilePolicy",
     "Registry",
     "Regression",
     "SpanEvent",
     "Tracer",
+    "TraversalProfiler",
     "append_history",
     "default_registry",
     "detect_regressions",
     "extract_series",
+    "leaf_drift_distance",
     "load_history",
     "prometheus_text",
     "set_default_registry",
     "snapshot",
+    "survival_from_classes",
     "write_chrome_trace",
     "write_json_snapshot",
 ]

@@ -38,7 +38,7 @@ def _prom_name(name: str) -> str:
 def _prom_labels(labelnames, labelvalues) -> str:
     if not labelnames:
         return ""
-    pairs = ", ".join(
+    pairs = ",".join(  # OpenMetrics: no whitespace between label pairs
         f'{_prom_name(k)}="{_escape(v)}"' for k, v in zip(labelnames, labelvalues)
     )
     return "{" + pairs + "}"
@@ -52,7 +52,7 @@ def series_name(name: str, labelnames, labelvalues) -> str:
     """Human/JSON series id: ``name{label="value",...}`` (dotted name kept)."""
     if not labelnames:
         return name
-    pairs = ",".join(f'{k}="{v}"' for k, v in zip(labelnames, labelvalues))
+    pairs = ",".join(f'{k}="{_escape(v)}"' for k, v in zip(labelnames, labelvalues))
     return f"{name}{{{pairs}}}"
 
 
@@ -123,7 +123,7 @@ def prometheus_text(registry: "Registry") -> str:
 def _merge(labels: str, extra: str) -> str:
     if not labels:
         return "{" + extra + "}"
-    return labels[:-1] + ", " + extra + "}"
+    return labels[:-1] + "," + extra + "}"
 
 
 def _fmt(v: float) -> str:

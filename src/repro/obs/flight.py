@@ -127,6 +127,25 @@ class FlightRecorder:
                 self._maybe_dump("slo_breach")
         return breached
 
+    def note_drift(self, *, bucket: str = "", distance: float = 0.0,
+                   **annotations) -> None:
+        """Record a traversal-drift event in the wave ring.
+
+        Drift is context, not an emergency: the record rides the ring so the
+        *next* bundle (whatever triggers it) shows that the workload's leaf
+        distribution moved — no dump of its own.
+        """
+        rec = {
+            "t": time.time(),
+            "drift": True,
+            "bucket": str(bucket),
+            "distance": float(distance),
+        }
+        if annotations:
+            rec.update({k: _jsonable(v) for k, v in annotations.items()})
+        with self._lock:
+            self._ring.append(rec)
+
     def note_exception(self, exc: BaseException) -> None:
         """Record an exception escaping the eval path; dump if configured."""
         rec = {

@@ -43,6 +43,7 @@ __all__ = [
     "extract_series",
     "history_record",
     "load_history",
+    "skipped_series",
 ]
 
 #: Environment fields two runs must share before their timings may compare.
@@ -239,6 +240,31 @@ def detect_regressions(
                 baseline_ms=baseline, threshold_ms=threshold,
                 mad_ms=mad, n_baseline=len(base_vals),
             ))
+    return out
+
+
+def skipped_series(
+    records: list[dict],
+    *,
+    window: int = 5,
+    min_runs: int = 2,
+) -> list[tuple[str, int]]:
+    """Series in the latest run whose baseline is too thin to judge.
+
+    Returns ``(series, n_baseline)`` for every series of the latest run
+    backed by fewer than ``min_runs`` same-environment predecessor entries
+    in the ``window``-run pool — including zero (a brand-new workload, or a
+    history whose env just changed).  :func:`detect_regressions` silently
+    contributes nothing for these; the CI gate wants them *reported*, so a
+    run that checked nothing cannot read as a run that passed.
+    """
+    latest = records[-1] if records else {}
+    pool = baseline_pool(records, window=window)
+    out: list[tuple[str, int]] = []
+    for name in sorted(latest.get("series") or {}):
+        n = sum(1 for r in pool if name in (r.get("series") or {}))
+        if n < min_runs:
+            out.append((name, n))
     return out
 
 

@@ -13,7 +13,9 @@ Prometheus text snapshot, then assert that
   :class:`repro.obs.DuplicateMetricError`;
 * a serve pass under an unmeetable SLO trips the flight recorder — breach
   counters land in the registry and the dumped bundle (``flight.json`` +
-  Perfetto ``trace.json``) parses.
+  Perfetto ``trace.json``) parses;
+* a sampled shadow-profile pass publishes per-bucket d_µ / waste-ratio
+  gauges and Perfetto **counter tracks** (``"ph": "C"`` events) that parse.
 
 Artifacts land in ``--out`` (default ``/tmp/repro_obs_smoke``) so the CI
 job can upload them.  Exit code 0 means every assertion passed.
@@ -69,7 +71,7 @@ def _forest(seed: int = 0):
     return EncodedForest(trees), data
 
 
-def _serve_traced(registry, tracer, flight=None):
+def _serve_traced(registry, tracer, flight=None, profile=None):
     import numpy as np
 
     from repro.serve import ForestServeEngine, TreeRequest
@@ -77,10 +79,13 @@ def _serve_traced(registry, tracer, flight=None):
     forest, data = _forest()
     rec = np.tile(data.x_test, (WAVE_RECORDS // data.x_test.shape[0] + 1, 1))
     rec = rec[:WAVE_RECORDS].astype(np.float32)
+    # profile defaults to None (not the engine's default-on policy) so the
+    # span-nesting and flight checks stay deterministic; check_profiler
+    # passes an explicit synchronous policy
     eng = ForestServeEngine(
         forest, max_batch=WAVE_RECORDS, chunk_records=WAVE_RECORDS // 4,
-        n_classes=N_CLASSES, retune=None, registry=registry, tracer=tracer,
-        flight=flight,
+        n_classes=N_CLASSES, retune=None, profile=profile,
+        registry=registry, tracer=tracer, flight=flight,
     )
     reqs = [TreeRequest(uid=i, records=rec) for i in range(REQUESTS)]
     out = eng.run(reqs)
@@ -160,6 +165,48 @@ def check_prometheus(path: Path) -> None:
     print(f"prometheus text ok: {len(seen)} series, core metrics present")
 
 
+def check_profiler(out_dir: Path) -> None:
+    """A sampled shadow pass must publish gauges + parsable counter tracks."""
+    from repro import obs
+
+    registry, tracer = obs.Registry(), obs.Tracer()
+    eng = _serve_traced(
+        registry, tracer,
+        profile=obs.ProfilePolicy(sample_every=1, synchronous=True),
+    )
+    assert eng.profiler is not None, "engine built without a profiler"
+    eng.profiler.drain()
+    snap = obs.snapshot(registry)
+    sampled = [v for k, v in snap["counters"].items()
+               if k.startswith("prof.sampled")]
+    assert sampled and sum(sampled) > 0, "no profiled waves counted"
+    d_mu = {k: v for k, v in snap["gauges"].items() if k.startswith("prof.d_mu")}
+    assert d_mu and all(v >= 1.0 for v in d_mu.values()), \
+        f"per-bucket d_mu gauges missing or degenerate: {d_mu}"
+    waste = {k: v for k, v in snap["gauges"].items()
+             if k.startswith("prof.waste_ratio")}
+    assert waste and all(v >= 1.0 for v in waste.values()), \
+        f"per-bucket waste-ratio gauges missing or degenerate: {waste}"
+
+    path = out_dir / "profile_trace.json"
+    tracer.write_chrome_trace(path)
+    doc = json.loads(path.read_text())
+    counters = [e for e in doc["traceEvents"] if e.get("ph") == "C"]
+    assert counters, "no counter-track events in profile trace"
+    for ev in counters:
+        # Perfetto counter tracks: no dur, numeric args only
+        assert "dur" not in ev, f"counter event carries dur: {ev}"
+        args = ev.get("args")
+        assert args and all(isinstance(v, (int, float)) for v in args.values()), \
+            f"counter event args not numeric: {ev}"
+    tracks = {e["name"] for e in counters}
+    for prefix in ("prof.d_mu/", "prof.waste/"):
+        assert any(t.startswith(prefix) for t in tracks), \
+            f"no {prefix}* counter track among {sorted(tracks)}"
+    print(f"profiler ok: {len(d_mu)} bucket(s), {len(counters)} counter "
+          f"events across {len(tracks)} tracks")
+
+
 def check_duplicate_registration(registry) -> None:
     from repro.obs import DuplicateMetricError
 
@@ -198,6 +245,7 @@ def main(argv=None) -> int:
     json.loads(snap_path.read_text())  # snapshot must round-trip
     check_duplicate_registration(registry)
     check_flight_bundle(out / "flight")
+    check_profiler(out)
     print(f"artifacts in {out}")
     return 0
 

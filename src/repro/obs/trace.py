@@ -49,6 +49,7 @@ class SpanEvent(NamedTuple):
     thread: int          # thread ident (raw)
     thread_name: str
     args: dict
+    ph: str = "X"        # trace phase: "X" complete span, "C" counter sample
 
 
 class _Span:
@@ -149,7 +150,22 @@ class Tracer:
         t = time.perf_counter()
         self._record(name, cat, t, t, args)
 
-    def _record(self, name: str, cat: str, t0: float, t1: float, args: dict) -> None:
+    def counter(self, name: str, value: float, *, cat: str = "prof",
+                series: str = "value") -> None:
+        """Record one sample on a Perfetto counter track (``"C"`` phase).
+
+        Successive samples with the same ``name`` render as a stepped
+        timeline in Perfetto — e.g. per-bucket measured d_µ or waste ratio
+        over the lifetime of a serving engine.  ``series`` names the counter
+        track's value series (one arg key = one line on the track).
+        """
+        if not self.enabled:
+            return
+        t = time.perf_counter()
+        self._record(name, cat, t, t, {series: float(value)}, ph="C")
+
+    def _record(self, name: str, cat: str, t0: float, t1: float, args: dict,
+                *, ph: str = "X") -> None:
         th = threading.current_thread()
         ev = SpanEvent(
             name=name,
@@ -159,6 +175,7 @@ class Tracer:
             thread=th.ident or 0,
             thread_name=th.name,
             args=args,
+            ph=ph,
         )
         with self._lock:
             if len(self._events) == self.capacity:
@@ -187,9 +204,11 @@ class Tracer:
         """The Chrome trace-event JSON object (load in Perfetto / about:tracing).
 
         Complete ("X") events carry µs timestamps relative to the tracer
-        epoch; per-thread metadata ("M") events name the tracks.  Args are
-        emitted as-is, so bucket keys, chunk sizes and winners are
-        inspectable per-span in the UI.
+        epoch; counter ("C") samples from :meth:`counter` carry numeric args
+        and no duration (Perfetto draws them as counter tracks); per-thread
+        metadata ("M") events name the tracks.  Args are emitted as-is, so
+        bucket keys, chunk sizes and winners are inspectable per-span in
+        the UI.
         """
         pid = os.getpid()
         events = self.events()
@@ -197,16 +216,18 @@ class Tracer:
         out = []
         for e in events:
             tids.setdefault(e.thread, e.thread_name)
-            out.append({
+            ev = {
                 "name": e.name,
                 "cat": e.cat,
-                "ph": "X",
+                "ph": e.ph,
                 "ts": round(e.ts_us, 3),
-                "dur": round(e.dur_us, 3),
                 "pid": pid,
                 "tid": e.thread,
                 "args": {k: _jsonable(v) for k, v in e.args.items()},
-            })
+            }
+            if e.ph != "C":  # counter samples are point values, no duration
+                ev["dur"] = round(e.dur_us, 3)
+            out.append(ev)
         meta = [
             {"name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
              "args": {"name": name}}

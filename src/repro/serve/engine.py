@@ -244,8 +244,36 @@ class BackgroundRetuner:
             "serve.retune.completed", "background re-tunes promoted")
         self.m_failed = r.counter(
             "serve.retune.failed", "background re-tunes that raised")
+        self.m_forced = r.counter(
+            "serve.retune.forced", "re-tunes forced by the drift detector")
         self.m_measure_ms = r.histogram(
             "serve.retune.measure_ms", "background measurement wall time")
+
+    def force(self, key: str, batch: np.ndarray) -> bool:
+        """Launch a re-tune for ``key`` immediately (drift detector hook).
+
+        Bypasses the hot-waves gate *and* the once-per-bucket ``started``
+        guard — a drifted bucket was tuned for traffic that no longer
+        exists, so it must be measurable again.  Still respects
+        ``max_concurrent`` and never runs two measurements of the same
+        bucket at once; returns False when no worker slot was available.
+        """
+        with self._lock:
+            self._threads = [t for t in self._threads if t.is_alive()]
+            if len(self._threads) >= self.policy.max_concurrent:
+                return False
+            if any(t.name == f"retune:{key}" for t in self._threads):
+                return False
+            self.started.add(key)
+            snap = np.array(batch, copy=True)
+            th = threading.Thread(
+                target=self._work, args=(key, snap), daemon=True, name=f"retune:{key}"
+            )
+            self._threads.append(th)
+        self.m_launched.inc()
+        self.m_forced.inc()
+        th.start()
+        return True
 
     def note(self, key: str, batch: np.ndarray) -> None:
         """Record one served wave for ``key``; maybe launch a re-tune."""
@@ -434,6 +462,7 @@ class TreeServeEngine:
     def __init__(self, tree, *, max_batch: int = 4096, cache=None,
                  autotune: bool = False, engines=None,
                  retune: RetunePolicy | None = RetunePolicy(),
+                 profile: "obs.ProfilePolicy | None" = obs.ProfilePolicy(),
                  registry: obs.Registry | None = None,
                  tracer: obs.Tracer | None = None,
                  flight: "obs.FlightPolicy | obs.FlightRecorder | None" = None):
@@ -445,9 +474,29 @@ class TreeServeEngine:
         self.obs = registry if registry is not None else obs.Registry()
         self.tracer = tracer if tracer is not None else obs.NULL_TRACER
         self.flight = _make_flight(flight, self.obs, self.tracer, "tree")
+        self.profiler: obs.TraversalProfiler | None = None
+        if profile is not None:
+            from repro.kernels.tree_eval.profile import profile_tree_eval
+
+            def _profile_fn(batch, _tree=tree):
+                return profile_tree_eval(batch, _tree)
+
+            def _on_drift(key, distance, records):
+                # drift = the bucket's tuned winner was picked for traffic
+                # that no longer exists: annotate the flight ring and force
+                # a background re-measurement on the drifted records
+                if self.flight is not None:
+                    self.flight.note_drift(bucket=key, distance=distance,
+                                           engine="tree")
+                if self.retuner is not None:
+                    self.retuner.force(key, records)
+
+            self.profiler = obs.TraversalProfiler(
+                _profile_fn, profile, registry=self.obs, tracer=self.tracer,
+                n_nodes=int(tree.n_nodes), on_drift=_on_drift, engine="tree")
         self._eval = TunedEvaluator(
             tree, cache=cache, autotune=autotune, engines=engines,
-            registry=self.obs, tracer=self.tracer,
+            registry=self.obs, tracer=self.tracer, profiler=self.profiler,
         )
         self.tree = tree
         self.max_batch = max_batch
@@ -519,6 +568,8 @@ class TreeServeEngine:
             r.done = True
             off += m
         self.stats.note_bucket_wave(key)
+        if self.profiler is not None:
+            self.profiler.note_wave(key, batch)
         if self.retuner is not None:
             self.retuner.note(key, batch)
 
@@ -627,6 +678,7 @@ class ForestServeEngine:
                  decomposition=None, cache=None, autotune: bool = False, engines=None,
                  retune: RetunePolicy | None = RetunePolicy(),
                  anytime: AnytimePolicy | None = None,
+                 profile: "obs.ProfilePolicy | None" = obs.ProfilePolicy(),
                  registry: obs.Registry | None = None,
                  tracer: obs.Tracer | None = None,
                  flight: "obs.FlightPolicy | obs.FlightRecorder | None" = None):
@@ -637,10 +689,30 @@ class ForestServeEngine:
         self.obs = registry if registry is not None else obs.Registry()
         self.tracer = tracer if tracer is not None else obs.NULL_TRACER
         self.flight = _make_flight(flight, self.obs, self.tracer, "forest")
+        self.profiler: obs.TraversalProfiler | None = None
+        if profile is not None:
+
+            def _profile_fn(batch):
+                # deferred attribute access: self.forest is the executor's
+                # normalised EncodedForest, assigned a few lines below
+                from repro.kernels.tree_eval.profile import profile_forest_eval
+
+                return profile_forest_eval(batch, self.forest)
+
+            def _on_drift(key, distance, records):
+                if self.flight is not None:
+                    self.flight.note_drift(bucket=key, distance=distance,
+                                           engine="forest")
+                if self.retuner is not None:
+                    self.retuner.force(key, records)
+
+            self.profiler = obs.TraversalProfiler(
+                _profile_fn, profile, registry=self.obs, tracer=self.tracer,
+                n_classes=n_classes, on_drift=_on_drift, engine="forest")
         self._eval = ShardedForestEvaluator(
             forest, mesh=mesh, plan=plan, decomposition=decomposition,
             cache=cache, autotune=autotune, engines=engines,
-            registry=self.obs, tracer=self.tracer,
+            registry=self.obs, tracer=self.tracer, profiler=self.profiler,
         )
         self._chunker = StreamingChunker(
             self._eval, chunk_records=chunk_records,
@@ -796,6 +868,8 @@ class ForestServeEngine:
                 requests=len(wave),
                 mode="anytime" if self.anytime is not None else "stream",
             )
+        if self.profiler is not None:
+            self.profiler.note_wave(key, batch)
         if self.retuner is not None:
             self.retuner.note(key, batch)
 

@@ -95,6 +95,11 @@ class TuneEntry:
     # provenance, for reports / staleness checks
     shape: dict | None = None
     backend: str = ""
+    # d_µ the resolution saw, and where it came from ("measured" = traversal
+    # profiler, "sampled" = host descent on the batch, "prior" = geometry,
+    # "caller" = heuristic_kw override, "" = unrecorded pre-profiler entry)
+    d_mu: float | None = None
+    d_mu_source: str = ""
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -107,6 +112,8 @@ class TuneEntry:
             median_ms=float(d.get("median_ms", 0.0)),
             shape=d.get("shape"),
             backend=str(d.get("backend", "")),
+            d_mu=(None if d.get("d_mu") is None else float(d["d_mu"])),
+            d_mu_source=str(d.get("d_mu_source", "")),
         )
 
 

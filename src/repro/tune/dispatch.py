@@ -24,6 +24,7 @@ re-tune drives.
 
 from __future__ import annotations
 
+import dataclasses
 import threading
 
 import jax
@@ -47,6 +48,7 @@ from repro.kernels.tree_eval.ops import (
 from repro.tune.cache import TuneCache, TuneEntry
 from repro.tune.heuristic import (
     cascade_heuristic_candidate,
+    default_d_mu,
     forest_heuristic_candidate,
     heuristic_candidate,
     measured_d_mu,
@@ -87,9 +89,41 @@ class _TuneObs:
             "tune.heuristic_agreement",
             "measured winner vs §3.6-heuristic pick, per autotune resolution",
             ("level", "agree"))
+        self.d_mu_gauge = r.gauge(
+            "tune.d_mu", "d_µ the §3.6 heuristic evaluated at, by provenance",
+            ("level", "source"))
+        self.d_mu_provenance = r.counter(
+            "tune.d_mu_provenance",
+            "heuristic resolutions by d_µ provenance "
+            "(measured=traversal profiler, sampled=host descent, prior=geometry)",
+            ("level", "source"))
+        self.d_mu_agreement = r.counter(
+            "tune.d_mu_agreement",
+            "measured-d_µ heuristic pick vs geometry-prior pick, per resolution",
+            ("level", "agree"))
+        self.survival_provenance = r.counter(
+            "tune.survival_provenance",
+            "cascade-survival provenance at class-level resolutions",
+            ("source",))
 
     def note_resolution(self, level: str, source: str) -> None:
         self.resolutions.labels(level=level, source=source).inc()
+
+    def note_d_mu(self, level: str, source: str, value: float) -> None:
+        self.d_mu_provenance.labels(level=level, source=source).inc()
+        self.d_mu_gauge.labels(level=level, source=source).set(value)
+
+    def note_d_mu_agreement(self, level: str, cand: Candidate,
+                            prior_pick) -> None:
+        """Would the geometry prior have picked the same variant as the
+        profiler-measured d_µ did?  Mirrors :meth:`note_agreement` — a
+        running answer to "does measuring d_µ actually change decisions?"."""
+        try:
+            h = prior_pick()
+            agree = "yes" if h.variant == cand.variant else "no"
+        except Exception:
+            agree = "error"
+        self.d_mu_agreement.labels(level=level, agree=agree).inc()
 
     def note_swap(self, level: str, key: str) -> None:
         self.swaps.labels(level=level).inc()
@@ -103,6 +137,26 @@ class _TuneObs:
         except Exception:
             agree = "error"
         self.agreement.labels(level=level, agree=agree).inc()
+
+
+def _resolve_d_mu(kw: dict, *, profiler, key: str, measure: bool, sample_fn):
+    """Fill ``kw["d_mu"]`` through the provenance ladder; returns the source.
+
+    caller-supplied ``heuristic_kw`` override > traversal-profiler
+    measurement for this bucket > host-sampled descent on the batch >
+    geometry prior (``kw`` left without d_mu — the heuristic defaults it).
+    """
+    if "d_mu" in kw:
+        return "caller"
+    if profiler is not None:
+        measured = profiler.d_mu(key)
+        if measured is not None:
+            kw["d_mu"] = measured
+            return "measured"
+    if measure:
+        kw["d_mu"] = sample_fn()
+        return "sampled"
+    return "prior"
 
 
 class TunedEvaluator:
@@ -126,12 +180,16 @@ class TunedEvaluator:
         heuristic_kw: dict | None = None,
         registry: obs.Registry | None = None,
         tracer: obs.Tracer | None = None,
+        profiler=None,
     ):
         self.enc = enc
         self.cache = cache if cache is not None else TuneCache()
         self.autotune = autotune
         self.engines = engines
         self._obs = _TuneObs(registry, tracer)
+        # a TraversalProfiler (or anything with .d_mu(key)): measured d_µ
+        # per bucket beats both the host sample and the geometry prior
+        self.profiler = profiler
         self.measure_kw = dict(measure_kw or {})
         # heuristic fallback: measure d_µ on a sample of the actual batch
         # (paper: "measured on a significant sample") instead of trusting
@@ -171,6 +229,17 @@ class TunedEvaluator:
             self._resolved.clear()
             self._fast.clear()
 
+    def _stamp_d_mu_provenance(self, key: str, entry: TuneEntry) -> None:
+        """Re-store an autotuned cache entry with the profiler's measured d_µ
+        (cache provenance: a later reader can see what traffic the winner
+        was tuned under, and whether d_µ was measured or assumed)."""
+        measured = self.profiler.d_mu(key) if self.profiler is not None else None
+        if measured is not None:
+            self.cache.store(
+                key,
+                dataclasses.replace(entry, d_mu=measured, d_mu_source="measured"),
+            )
+
     def resolve(self, records) -> tuple[Candidate, str]:
         """Pick the candidate for this batch; returns (candidate, source)
         with source ∈ {"memo", "cache", "autotune", "heuristic"}."""
@@ -205,12 +274,26 @@ class TunedEvaluator:
                 lambda: heuristic_candidate(
                     shape, engines=self.engines, **self.heuristic_kw),
             )
+            self._stamp_d_mu_provenance(key, entry)
         else:
             kw = dict(self.heuristic_kw)
-            if self.measure_d_mu and "d_mu" not in kw:
-                kw["d_mu"] = measured_d_mu(self.enc, records, sample=self.d_mu_sample)
+            d_mu_source = _resolve_d_mu(
+                kw, profiler=self.profiler, key=key, measure=self.measure_d_mu,
+                sample_fn=lambda: measured_d_mu(
+                    self.enc, records, sample=self.d_mu_sample),
+            )
             cand = heuristic_candidate(shape, engines=self.engines, **kw)
             source = "heuristic"
+            self._obs.note_d_mu(
+                "tree", d_mu_source, kw.get("d_mu", default_d_mu(shape)))
+            if d_mu_source == "measured":
+                prior_kw = dict(self.heuristic_kw)
+                prior_kw.pop("d_mu", None)
+                self._obs.note_d_mu_agreement(
+                    "tree", cand,
+                    lambda: heuristic_candidate(
+                        shape, engines=self.engines, **prior_kw),
+                )
         self._obs.note_resolution("tree", source)
         # setdefault under the lock: if a background promote() landed while
         # we resolved, its winner must not be overwritten with ours (and the
@@ -306,6 +389,7 @@ class ForestTunedEvaluator:
         heuristic_kw: dict | None = None,
         registry: obs.Registry | None = None,
         tracer: obs.Tracer | None = None,
+        profiler=None,
     ):
         from repro.core.forest import EncodedForest  # local: core ↔ tune layering
 
@@ -314,6 +398,9 @@ class ForestTunedEvaluator:
         self.autotune = autotune
         self.engines = engines
         self._obs = _TuneObs(registry, tracer)
+        # a TraversalProfiler keyed by this evaluator's forest-bucket keys:
+        # measured d_µ and cascade survival replace the sample/prior fallbacks
+        self.profiler = profiler
         self.families = families
         self.measure_kw = dict(measure_kw or {})
         self.measure_d_mu = measure_d_mu
@@ -362,6 +449,15 @@ class ForestTunedEvaluator:
         if variant == PER_TREE_FAMILY:
             return PER_TREE_FAMILY in self.families
         return FOREST_VARIANTS[variant].family in self.families
+
+    def _stamp_d_mu_provenance(self, key: str, entry: TuneEntry) -> None:
+        """See :meth:`TunedEvaluator._stamp_d_mu_provenance`."""
+        measured = self.profiler.d_mu(key) if self.profiler is not None else None
+        if measured is not None:
+            self.cache.store(
+                key,
+                dataclasses.replace(entry, d_mu=measured, d_mu_source="measured"),
+            )
 
     # -- resolution ---------------------------------------------------------
 
@@ -419,16 +515,30 @@ class ForestTunedEvaluator:
                     shape, engines=self.engines, families=self.families,
                     **self.heuristic_kw),
             )
+            self._stamp_d_mu_provenance(key, entry)
         else:
             kw = dict(self.heuristic_kw)
-            if self.measure_d_mu and "d_mu" not in kw:
-                kw["d_mu"] = measured_forest_d_mu(
-                    self.forest, records, sample=self.d_mu_sample
-                )
+            d_mu_source = _resolve_d_mu(
+                kw, profiler=self.profiler, key=key, measure=self.measure_d_mu,
+                sample_fn=lambda: measured_forest_d_mu(
+                    self.forest, records, sample=self.d_mu_sample),
+            )
             cand = forest_heuristic_candidate(
                 shape, engines=self.engines, families=self.families, **kw
             )
             source = "heuristic"
+            self._obs.note_d_mu(
+                "forest", d_mu_source,
+                kw.get("d_mu", default_d_mu(shape.tree_shape())))
+            if d_mu_source == "measured":
+                prior_kw = dict(self.heuristic_kw)
+                prior_kw.pop("d_mu", None)
+                self._obs.note_d_mu_agreement(
+                    "forest", cand,
+                    lambda: forest_heuristic_candidate(
+                        shape, engines=self.engines, families=self.families,
+                        **prior_kw),
+                )
         self._obs.note_resolution("forest", source)
         # same critical-section discipline as TunedEvaluator.resolve: don't
         # clobber a concurrent promote(), don't re-read after unlocking
@@ -535,19 +645,39 @@ class ForestTunedEvaluator:
             source = "autotune"
         else:
             kw = dict(self.heuristic_kw)
-            if self.measure_d_mu and "d_mu" not in kw:
-                kw["d_mu"] = measured_forest_d_mu(
-                    self.forest, records, sample=self.d_mu_sample
-                )
+            # profiler measurements are keyed by the forest bucket (the
+            # engine's wave key), not the |C-suffixed class key
+            forest_key = shape.key(backend)
+            d_mu_source = _resolve_d_mu(
+                kw, profiler=self.profiler, key=forest_key,
+                measure=self.measure_d_mu,
+                sample_fn=lambda: measured_forest_d_mu(
+                    self.forest, records, sample=self.d_mu_sample),
+            )
             survival = kw.pop("survival", None)
+            survival_source = "caller"
+            if survival is None and self.profiler is not None:
+                measured = self.profiler.survival(forest_key)
+                if measured is not None:
+                    # the profiler reports the mean per-stage survival rate;
+                    # expand it geometrically over the deepest stage grid the
+                    # heuristic may price (surv_s = rate^s, surv_0 = 1)
+                    survival = tuple(
+                        min(1.0, float(measured)) ** s for s in range(8))
+                    survival_source = "measured"
             if survival is None:
                 survival = measured_survival_rate(
                     self.forest, records, n_classes, sample=self.d_mu_sample
                 )
+                survival_source = "sampled"
             cand = cascade_heuristic_candidate(
                 shape, n_classes, survival=survival, engines=self.engines, **kw
             )
             source = "heuristic"
+            self._obs.note_d_mu(
+                "classes", d_mu_source,
+                kw.get("d_mu", default_d_mu(shape.tree_shape())))
+            self._obs.survival_provenance.labels(source=survival_source).inc()
         self._obs.note_resolution("classes", source)
         with self._swap_lock:
             resolved = self._resolved.setdefault(key, (cand, source))

@@ -7,6 +7,7 @@ the chunker's overlap-ratio histogram.
 
 import json
 import pathlib
+import re
 import sys
 import tempfile
 import threading
@@ -216,6 +217,43 @@ class TestExport:
             if not line.startswith("#"):
                 float(line.rsplit(" ", 1)[1])    # every sample value parses
 
+    # one sample line: name{label="value",...} value — label values quoted,
+    # pairs joined by a bare comma, backslash/quote/newline escaped
+    _SAMPLE_RE = re.compile(
+        r'^[a-zA-Z_:][a-zA-Z0-9_:]*'
+        r'(\{[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\\n]|\\["\\n])*"'
+        r'(,[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\\n]|\\["\\n])*")*\})?'
+        r' \S+$')
+
+    def test_prometheus_line_format_with_hostile_label_values(self):
+        # bucket keys carry |, :, = already; make sure the exposition also
+        # survives quotes, backslashes, newlines and spaces in label values
+        r = obs.Registry()
+        hostile = 'cpu:cpu:x1|M64 "quoted" back\\slash\nnewline'
+        r.counter("x.esc", "c", ("bucket", "mode")).labels(
+            bucket=hostile, mode="a b").inc(2)
+        h = r.histogram("x.lhist", "h", ("k",), boundaries=(1.0,))
+        h.labels(k='q"v').observe(0.5)
+        text = obs.prometheus_text(r)
+        for line in text.splitlines():
+            if line.startswith("#"):
+                continue
+            assert self._SAMPLE_RE.match(line), f"unparseable line: {line!r}"
+        counter_line = next(l for l in text.splitlines()
+                            if l.startswith("x_esc{"))
+        assert '",mode=' in counter_line          # no whitespace separator
+        assert '\\"quoted\\"' in counter_line     # escaped quotes
+        assert "back\\\\slash" in counter_line    # escaped backslash
+        assert "\\nnewline" in counter_line       # newline never splits a line
+        assert counter_line.endswith(" 2")
+        # _merge splices le= into existing labels with a bare comma too
+        assert 'x_lhist_bucket{k="q\\"v",le="1"} 1' in text.splitlines()
+        assert 'x_lhist_bucket{k="q\\"v",le="+Inf"} 1' in text.splitlines()
+        # the snapshot keeps the dotted name with the same escaping
+        snap = obs.snapshot(r)
+        (key,) = snap["counters"]
+        assert key.startswith('x.esc{bucket="') and '\\"quoted\\"' in key
+
 
 # ---------------------------------------------------------------------------
 # tracer
@@ -263,6 +301,66 @@ class TestTracer:
             tr.instant(f"e{i}")
         names = [e.name for e in tr.events()]
         assert names == ["e6", "e7", "e8", "e9"]
+        assert tr.dropped == 6
+        tr.clear()
+        assert tr.events() == [] and tr.dropped == 0
+
+    def test_counter_samples_export_as_counter_tracks(self):
+        tr = obs.Tracer()
+        tr.counter("prof.d_mu/k", 3.5, series="d_mu")
+        tr.counter("prof.d_mu/k", 4.25, series="d_mu")
+        with tr.span("x"):
+            pass
+        doc = tr.chrome_trace()
+        json.dumps(doc)
+        cs = [e for e in doc["traceEvents"] if e.get("ph") == "C"]
+        # stepped timeline: successive numeric samples, point values only
+        assert [e["args"]["d_mu"] for e in cs] == [3.5, 4.25]
+        assert all("dur" not in e for e in cs)
+        assert all(e["name"] == "prof.d_mu/k" and e["cat"] == "prof" for e in cs)
+        (x,) = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+        assert "dur" in x
+        # disabled tracer: counters are no-ops like spans
+        assert obs.NULL_TRACER.counter("c", 1.0) is None
+        assert obs.NULL_TRACER.events() == []
+
+    def test_ring_overflow_under_concurrent_writers(self):
+        """The serve path traces from the request thread while profiler and
+        retuner workers trace from theirs; eviction must lose only the oldest
+        spans and the dropped counter must account for every one of them."""
+        cap = 256
+        tr = obs.Tracer(capacity=cap)
+        n_threads, per_thread = 4, 1500
+
+        def work(tid):
+            for i in range(per_thread):
+                with tr.span(f"t{tid}", cat="test", idx=i):
+                    pass
+
+        old = sys.getswitchinterval()
+        sys.setswitchinterval(1e-5)    # force frequent preemption
+        try:
+            ts = [threading.Thread(target=work, args=(t,))
+                  for t in range(n_threads)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+        finally:
+            sys.setswitchinterval(old)
+        evs = tr.events()
+        total = n_threads * per_thread
+        assert len(evs) == cap
+        assert tr.dropped == total - cap    # nothing lost unaccounted
+        by_writer: dict[str, list] = {}
+        for e in evs:
+            by_writer.setdefault(e.name, []).append(e.args["idx"])
+        assert by_writer, "ring empty after concurrent writes"
+        for idxs in by_writer.values():
+            # survivors are exactly a suffix of that writer's stream:
+            # eviction is oldest-first and appends preserve per-thread
+            # order, so a surviving span implies every later one survived
+            assert idxs == list(range(idxs[0], per_thread))
 
 
 # ---------------------------------------------------------------------------

@@ -8,6 +8,7 @@ import importlib.util
 import json
 import pathlib
 import sys
+import threading
 
 import numpy as np
 import pytest
@@ -23,6 +24,7 @@ from repro.obs.perf import (
     env_key,
     extract_series,
     load_history,
+    skipped_series,
 )
 from repro.serve import TreeRequest, TreeServeEngine
 from repro.tune import TuneCache
@@ -115,6 +117,32 @@ class TestRegressionDetector:
         hist = [_run({"w": float(i)}) for i in range(10)]
         pool = baseline_pool(hist, window=3)
         assert [r["series"]["w"]["median_ms"] for r in pool] == [6.0, 7.0, 8.0]
+
+
+class TestSkippedSeries:
+    """Series detect_regressions silently skips must still be reportable."""
+
+    def test_thin_baseline_is_reported_with_its_count(self):
+        # seed run only: the series has zero same-env predecessors
+        assert skipped_series([_run({"w": 1.0})]) == [("w", 0)]
+        # one predecessor: still below the default min_runs=2
+        hist = [_run({"w": 1.0}), _run({"w": 1.0, "new": 5.0})]
+        assert skipped_series(hist) == [("new", 0), ("w", 1)]
+        # enough history: nothing to report
+        assert skipped_series([_run({"w": 1.0}) for _ in range(3)]) == []
+        assert skipped_series([]) == []
+
+    def test_env_change_orphans_the_baseline(self):
+        # same trick as test_env_mismatch_never_compares: a backend switch
+        # empties the pool, so every series of the latest run shows up skipped
+        tpu = dict(ENV, backend="tpu", device_kind="TPU v5e")
+        hist = [_run({"w": 1.0}) for _ in range(4)] + [_run({"w": 1.0}, env=tpu)]
+        assert skipped_series(hist) == [("w", 0)]
+
+    def test_min_runs_raises_the_bar(self):
+        hist = [_run({"w": 1.0}) for _ in range(4)]
+        assert skipped_series(hist, min_runs=3) == []
+        assert skipped_series(hist, min_runs=4) == [("w", 3)]
 
 
 # ---------------------------------------------------------------------------
@@ -213,6 +241,41 @@ class TestCheckRegressionsCLI:
         assert _cli().main(["--strict"]) == 0
         out = capsys.readouterr().out
         assert "0 regression(s)" in out
+
+    def test_skipped_series_reported_not_failed(self, tmp_path, capsys):
+        # one predecessor for "w", none for "fresh": both below min_runs=2,
+        # so the gate reports them without failing — even under --strict
+        self._write(tmp_path, [_run({"w": 1.0}), _run({"w": 1.0, "fresh": 2.0})])
+        rc = _cli().main(["--history-dir", str(tmp_path), "--strict"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert ("SKIPPED  toy/fresh: insufficient history "
+                "(0 same-env run(s), need 2)") in out
+        assert ("SKIPPED  toy/w: insufficient history "
+                "(1 same-env run(s), need 2)") in out
+        assert "2 skipped" in out
+
+    def test_skipped_series_in_json_and_min_runs(self, tmp_path, capsys):
+        self._write(tmp_path, [_run({"w": 1.0}) for _ in range(3)])
+        rc = _cli().main(["--history-dir", str(tmp_path), "--json"])
+        data = json.loads(capsys.readouterr().out)
+        assert rc == 0 and data["skipped"] == []
+        # raising the bar makes the same history insufficient
+        rc = _cli().main(["--history-dir", str(tmp_path), "--json",
+                          "--min-runs", "5"])
+        data = json.loads(capsys.readouterr().out)
+        assert rc == 0
+        assert data["skipped"] == [
+            {"bench": "toy", "series": "w", "n_baseline": 2}]
+
+    def test_empty_history_file_is_a_problem_not_a_crash(self, tmp_path, capsys):
+        (tmp_path / "toy.jsonl").write_text("")
+        rc = _cli().main(["--history-dir", str(tmp_path), "--json"])
+        data = json.loads(capsys.readouterr().out)
+        assert rc == 0                      # lax mode: warn only
+        assert data["checked"] == 0 and data["regressions"] == []
+        assert any("toy" in p for p in data["problems"])
+        assert _cli().main(["--history-dir", str(tmp_path), "--strict"]) == 1
 
     def test_strict_fails_on_missing_or_corrupt(self, tmp_path):
         cli = _cli()
@@ -361,6 +424,48 @@ class TestFlightRecorder:
         for _ in range(5):
             fr.note_wave(latency_ms=100.0)
         assert len(list(tmp_path.glob("flight-unit-*"))) == 1
+
+    def test_rate_limit_survives_simultaneous_breaches(self, tmp_path):
+        # two request threads breach at once: both breaches count, but the
+        # window admits exactly one bundle — no dir collision, no double dump
+        r = obs.Registry()
+        fr = obs.FlightRecorder(
+            obs.FlightPolicy(slo_ms=0.001, out_dir=str(tmp_path),
+                             min_dump_interval_s=3600.0),
+            registry=r, engine="unit")
+        barrier = threading.Barrier(2)
+        breached = []
+
+        def breach():
+            barrier.wait()
+            breached.append(fr.note_wave(latency_ms=100.0, bucket="b"))
+
+        ts = [threading.Thread(target=breach) for _ in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert breached == [True, True]
+        bundles = list(tmp_path.glob("flight-unit-*"))
+        assert len(bundles) == 1
+        json.loads((bundles[0] / "flight.json").read_text())  # intact bundle
+        snap = obs.snapshot(r)
+        assert snap["counters"]['flight.slo_breaches{engine="unit"}'] == 2
+        dumps = {k: v for k, v in snap["counters"].items()
+                 if k.startswith("flight.dumps")}
+        assert sum(dumps.values()) == 1
+        # both waves still made the ring, dumped or not
+        assert sum(1 for w in fr.waves() if w.get("breach")) == 2
+
+    def test_drift_rides_the_ring_without_dumping(self, tmp_path):
+        fr = obs.FlightRecorder(
+            obs.FlightPolicy(out_dir=str(tmp_path), min_dump_interval_s=0.0),
+            engine="unit")
+        fr.note_drift(bucket="b", distance=0.42, engine="tree")
+        assert not list(tmp_path.glob("flight-*"))      # context, not a dump
+        w = fr.waves()[-1]
+        assert w["drift"] is True and w["distance"] == 0.42
+        assert w["bucket"] == "b" and w["engine"] == "tree"
 
     def test_serve_engine_slo_breach_produces_loadable_bundle(self, tmp_path):
         # the acceptance path: an unmeetable SLO on a real serve engine must

@@ -1,0 +1,354 @@
+"""Traversal profiler: shadow-pass parity, sampling policy, drift detection,
+and the measured-d_µ feedback into the §3.6 heuristic dispatch."""
+
+import pathlib
+import tempfile
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core import BOTTOM, breadth_first_encode, random_tree, tree_depth
+from repro.core.analysis import (
+    level_active_fractions,
+    mean_traversal_depth,
+    observed_depths,
+    speculation_waste_ratio,
+)
+from repro.core.forest import EncodedForest
+from repro.kernels.tree_eval import (
+    forest_eval_ref,
+    profile_forest_eval,
+    profile_tree_eval,
+    tree_eval_ref,
+)
+from repro.obs.prof import leaf_drift_distance, survival_from_classes
+from repro.serve.engine import BackgroundRetuner, RetunePolicy
+from repro.tune import TuneCache, TunedEvaluator
+from repro.tune.space import WorkloadShape, backend_tag
+
+
+def _enc(seed=0, max_depth=6, n_attrs=9, n_classes=5, balance=0.7):
+    return breadth_first_encode(random_tree(
+        n_attrs=n_attrs, n_classes=n_classes, max_depth=max_depth,
+        seed=seed, balance=balance))
+
+
+def _forest(n_trees=4, **kw):
+    return EncodedForest([_enc(seed=s, **kw) for s in range(n_trees)])
+
+
+def _records(m, a, seed=0, shift=0.0):
+    r = np.random.default_rng(seed).normal(size=(m, a)).astype(np.float32)
+    return r + np.float32(shift)
+
+
+def _cache():
+    return TuneCache(pathlib.Path(tempfile.mkdtemp()) / "c.json")
+
+
+def _tree_ref(enc, rec):
+    return tree_eval_ref(
+        jnp.asarray(rec, jnp.float32),
+        jnp.asarray(enc.attr_idx, jnp.int32),
+        jnp.asarray(enc.threshold, jnp.float32),
+        jnp.asarray(enc.child, jnp.int32),
+        jnp.asarray(enc.class_val, jnp.int32),
+        max_depth=max(tree_depth(enc), 1),
+    )
+
+
+class TestShadowParity:
+    """The profiling descent must never disagree with the serving path."""
+
+    def test_tree_classes_bit_exact_with_ref(self):
+        for seed in range(4):
+            enc = _enc(seed=seed, max_depth=4 + seed)
+            rec = _records(128, 9, seed=seed)
+            prof = profile_tree_eval(rec, enc)
+            want = _tree_ref(enc, rec)
+            assert np.array_equal(np.asarray(prof.classes), np.asarray(want))
+
+    def test_exit_depth_matches_host_descent(self):
+        enc = _enc(seed=1)
+        rec = _records(256, 9, seed=1)
+        prof = profile_tree_eval(rec, enc)
+        host = observed_depths(enc, rec)
+        assert np.array_equal(np.asarray(prof.exit_depth), host)
+        assert np.isclose(prof.d_mu(), mean_traversal_depth(host))
+
+    def test_level_active_matches_analysis(self):
+        enc = _enc(seed=2)
+        rec = _records(200, 9, seed=2)
+        depth = max(tree_depth(enc), 1)
+        prof = profile_tree_eval(rec, enc)
+        want = level_active_fractions(observed_depths(enc, rec), depth)
+        np.testing.assert_allclose(np.asarray(prof.level_active), want, atol=1e-6)
+
+    def test_hit_count_accounting(self):
+        enc = _enc(seed=3)
+        rec = _records(150, 9, seed=3)
+        prof = profile_tree_eval(rec, enc)
+        # every internal evaluation is one unit of traversal depth
+        assert int(np.asarray(prof.node_hits).sum()) == int(
+            np.asarray(prof.exit_depth).sum())
+        # every record terminates at exactly one leaf
+        leaf_hits = np.asarray(prof.leaf_hits)
+        assert int(leaf_hits.sum()) == rec.shape[0]
+        is_leaf = np.asarray(enc.class_val) != BOTTOM
+        assert not leaf_hits[~is_leaf].any()
+
+    def test_extra_rounds_change_nothing(self):
+        enc = _enc(seed=4)
+        rec = _records(64, 9, seed=4)
+        base = profile_tree_eval(rec, enc)
+        more = profile_tree_eval(rec, enc, max_depth=tree_depth(enc) + 5)
+        assert np.array_equal(np.asarray(base.classes), np.asarray(more.classes))
+        assert np.array_equal(np.asarray(base.exit_depth),
+                              np.asarray(more.exit_depth))
+
+    def test_forest_classes_bit_exact_with_ref(self):
+        forest = _forest(n_trees=5, max_depth=5)
+        rec = _records(96, 9, seed=5)
+        prof = profile_forest_eval(rec, forest)
+        want = forest_eval_ref(
+            jnp.asarray(rec, jnp.float32),
+            jnp.asarray(forest.attr_idx, jnp.int32),
+            jnp.asarray(forest.threshold, jnp.float32),
+            jnp.asarray(forest.child, jnp.int32),
+            jnp.asarray(forest.class_val, jnp.int32),
+            max_depth=max(int(forest.max_depth), 1),
+        )
+        assert np.array_equal(np.asarray(prof.classes), np.asarray(want))
+        assert prof.leaf_histogram().sum() == forest.n_trees * rec.shape[0]
+
+
+class TestSurvivalAndDrift:
+    def test_survival_none_without_an_ensemble(self):
+        assert survival_from_classes(np.zeros((64,), np.int32), 4) is None
+        assert survival_from_classes(np.zeros((1, 64), np.int32), 4) is None
+
+    def test_unanimous_forest_exits_late_stages(self):
+        # T=6, 3 stages: after 2 trees margin 2 <= remaining 4 (alive),
+        # after 4 trees margin 4 > remaining 2 (exited) -> mean 0.5
+        classes = np.zeros((6, 32), np.int32)
+        s = survival_from_classes(classes, 4, stages=3)
+        assert s is not None and np.isclose(s, 0.5)
+
+    def test_contested_forest_survives(self):
+        # alternating votes keep the margin at <= 1: nothing can exit early
+        classes = np.stack([np.full((32,), t % 2, np.int32) for t in range(6)])
+        assert np.isclose(survival_from_classes(classes, 4, stages=3), 1.0)
+
+    def test_drift_distance_bounds(self):
+        p = np.array([10, 5, 0, 1], float)
+        assert leaf_drift_distance(p, p) == 0.0
+        assert np.isclose(
+            leaf_drift_distance([1, 0, 0], [0, 0, 1]), 1.0)
+        # padding: mass moved into a new leaf index counts
+        assert leaf_drift_distance([4, 4], [4, 4, 0]) == 0.0
+        assert leaf_drift_distance([0, 0], [0, 0]) == 0.0
+        assert leaf_drift_distance([1, 1], [0, 0]) == 1.0
+
+
+class TestTraversalProfiler:
+    def _profiler(self, enc, policy, **kw):
+        return obs.TraversalProfiler(
+            lambda batch: profile_tree_eval(batch, enc),
+            policy, n_nodes=int(enc.n_nodes), **kw)
+
+    def test_sampling_cadence_and_metrics(self):
+        enc = _enc(seed=0)
+        r = obs.Registry()
+        p = self._profiler(
+            enc, obs.ProfilePolicy(sample_every=4, synchronous=True),
+            registry=r)
+        rec = _records(64, 9)
+        sampled = [p.note_wave("k", rec) for _ in range(9)]
+        # first wave always profiles, then every 4th
+        assert sampled == [True, False, False, False,
+                           True, False, False, False, True]
+        snap = obs.snapshot(r)
+        assert snap["counters"]["prof.waves"] == 9
+        assert snap["counters"]["prof.sampled"] == 3
+        assert snap["counters"]["prof.records"] == 3 * 64
+        prof = p.profile("k")
+        assert prof is not None and prof.samples == 3
+        host_d_mu = mean_traversal_depth(observed_depths(enc, rec))
+        assert np.isclose(prof.d_mu, host_d_mu)
+        assert np.isclose(prof.waste_ratio,
+                          speculation_waste_ratio(enc.n_nodes, host_d_mu))
+        assert np.isclose(snap["gauges"]['prof.d_mu{bucket="k"}'], host_d_mu)
+        assert snap["gauges"]['prof.waste_ratio{bucket="k"}'] > 1.0
+        assert snap["histograms"]["prof.exit_depth"]["count"] == 3 * 64
+        assert p.keys() == ["k"]
+
+    def test_disabled_policy_profiles_nothing(self):
+        enc = _enc(seed=0)
+        p = self._profiler(enc, obs.ProfilePolicy(sample_every=0))
+        assert p.note_wave("k", _records(32, 9)) is False
+        assert p.profile("k") is None and p.d_mu("k") is None
+
+    def test_sample_records_caps_the_pass(self):
+        enc = _enc(seed=0)
+        p = self._profiler(
+            enc,
+            obs.ProfilePolicy(sample_every=1, sample_records=50,
+                              synchronous=True))
+        p.note_wave("k", _records(400, 9))
+        assert p.profile("k").records == 50
+
+    def test_profile_errors_are_counted_not_raised(self):
+        def boom(batch):
+            raise RuntimeError("shadow pass died")
+
+        r = obs.Registry()
+        p = obs.TraversalProfiler(
+            boom, obs.ProfilePolicy(sample_every=1, synchronous=True),
+            registry=r)
+        assert p.note_wave("k", _records(8, 4)) is True
+        assert obs.snapshot(r)["counters"]["prof.errors"] == 1
+        assert p.profile("k") is None
+
+    def test_forest_survival_published(self):
+        forest = _forest(n_trees=4, max_depth=4)
+        r = obs.Registry()
+        p = obs.TraversalProfiler(
+            lambda batch: profile_forest_eval(batch, forest),
+            obs.ProfilePolicy(sample_every=1, synchronous=True),
+            registry=r, n_nodes=int(forest.n_nodes), n_classes=5)
+        p.note_wave("fk", _records(64, 9))
+        s = p.survival("fk")
+        assert s is not None and 0.0 <= s <= 1.0
+        assert 'prof.survival{bucket="fk"}' in obs.snapshot(r)["gauges"]
+
+    def test_counter_tracks_land_in_tracer(self):
+        enc = _enc(seed=0)
+        tr = obs.Tracer()
+        p = self._profiler(
+            enc, obs.ProfilePolicy(sample_every=1, synchronous=True),
+            tracer=tr)
+        p.note_wave("k", _records(32, 9))
+        tracks = {e.name for e in tr.events() if e.ph == "C"}
+        assert tracks == {"prof.d_mu/k", "prof.waste/k"}
+
+    def test_drift_fires_once_then_reanchors(self):
+        enc = _enc(seed=6, max_depth=7, balance=0.6)
+        events = []
+        r = obs.Registry()
+        p = self._profiler(
+            enc,
+            obs.ProfilePolicy(
+                sample_every=1, synchronous=True, drift_window=4,
+                drift_min_samples=2, drift_threshold=0.05),
+            registry=r, on_drift=lambda k, d, rec: events.append((k, d)))
+        # steady traffic: window fills, distances stay under the floor
+        for i in range(4):
+            p.note_wave("k", _records(256, 9, seed=i))
+        assert events == []
+        # the distribution shifts: records land in different leaves
+        shifted = [_records(256, 9, seed=10 + i, shift=5.0) for i in range(4)]
+        p.note_wave("k", shifted[0])
+        assert len(events) == 1
+        key, dist = events[0]
+        assert key == "k" and dist > 0.05
+        snap = obs.snapshot(r)
+        assert snap["counters"]['prof.drift_events{bucket="k"}'] == 1
+        assert snap["gauges"]['prof.drift_distance{bucket="k"}'] == dist
+        # window re-anchored on the new distribution: sustained shift is quiet
+        for s in shifted[1:]:
+            p.note_wave("k", s)
+        assert len(events) == 1
+
+    def test_async_pass_lands_after_drain(self):
+        enc = _enc(seed=0)
+        p = self._profiler(enc, obs.ProfilePolicy(sample_every=1))
+        assert p.note_wave("k", _records(64, 9)) is True
+        p.drain()
+        assert p.d_mu("k") is not None
+
+
+class TestDispatchFeedback:
+    """Measured d_µ must reach the §3.6 heuristic with provenance."""
+
+    def _profiled(self, enc, rec):
+        p = obs.TraversalProfiler(
+            lambda batch: profile_tree_eval(batch, enc),
+            obs.ProfilePolicy(sample_every=1, synchronous=True),
+            n_nodes=int(enc.n_nodes))
+        key = WorkloadShape.of(rec, enc).key(backend_tag())
+        assert p.note_wave(key, rec) is True
+        return p, key
+
+    def test_measured_d_mu_reaches_heuristic(self):
+        enc = _enc(seed=0)
+        rec = _records(64, 9)
+        prof, key = self._profiled(enc, rec)
+        r = obs.Registry()
+        ev = TunedEvaluator(enc, cache=_cache(), profiler=prof, registry=r)
+        out = ev(rec)
+        # the dispatch stays correct while consuming the measurement
+        assert np.array_equal(np.asarray(out), np.asarray(_tree_ref(enc, rec)))
+        snap = obs.snapshot(r)
+        g = 'tune.d_mu{level="tree",source="measured"}'
+        assert g in snap["gauges"]
+        assert np.isclose(snap["gauges"][g], prof.d_mu(key))
+        assert snap["counters"][
+            'tune.d_mu_provenance{level="tree",source="measured"}'] == 1
+        # the agreement counter answers "did measuring change the pick?"
+        agree = [k for k in snap["counters"]
+                 if k.startswith('tune.d_mu_agreement{level="tree"')]
+        assert sum(snap["counters"][k] for k in agree) == 1
+
+    def test_unprofiled_bucket_falls_back_to_sampled(self):
+        enc = _enc(seed=0)
+        rec = _records(64, 9)
+        r = obs.Registry()
+        ev = TunedEvaluator(enc, cache=_cache(), registry=r)
+        ev(rec)
+        snap = obs.snapshot(r)
+        assert snap["counters"][
+            'tune.d_mu_provenance{level="tree",source="sampled"}'] == 1
+        assert 'tune.d_mu{level="tree",source="measured"}' not in snap["gauges"]
+
+    def test_resolution_is_memoized_per_bucket(self):
+        enc = _enc(seed=0)
+        rec = _records(64, 9)
+        prof, _ = self._profiled(enc, rec)
+        r = obs.Registry()
+        ev = TunedEvaluator(enc, cache=_cache(), profiler=prof, registry=r)
+        ev(rec)
+        ev(rec)  # second call: fast path, no second resolution
+        snap = obs.snapshot(r)
+        assert snap["counters"][
+            'tune.d_mu_provenance{level="tree",source="measured"}'] == 1
+
+
+class TestRetunerForce:
+    def test_force_bypasses_gates_and_dedups(self):
+        release = threading.Event()
+        measured = []
+
+        def measure(batch):
+            release.wait(5.0)
+            measured.append(batch.shape)
+            return object()
+
+        r = obs.Registry()
+        rt = BackgroundRetuner(
+            measure, lambda key, entry: None,
+            RetunePolicy(hot_waves=1000, max_concurrent=1), registry=r)
+        batch = _records(16, 4)
+        assert rt.force("bucket", batch) is True
+        # same bucket while the measurement runs: refused, not queued
+        assert rt.force("bucket", batch) is False
+        # the single worker slot is taken: other buckets are refused too
+        assert rt.force("other", batch) is False
+        release.set()
+        for t in rt._threads:
+            t.join(5.0)
+        snap = obs.snapshot(r)
+        assert snap["counters"]["serve.retune.forced"] == 1
+        assert snap["counters"]["serve.retune.launched"] == 1
+        assert measured == [batch.shape]
