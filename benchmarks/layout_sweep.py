@@ -1,0 +1,199 @@
+"""Node-table layout sweep: f32 `PackedForest` vs quantized SoA layouts.
+
+For the forest operating points the tune sweep uses, this bench compares
+the full-width f32 fused tables (``PackedForest`` — attr-select matrix +
+f32 node columns) against the compact :class:`QuantizedForest` layouts
+(int8/int16 indices, bf16/f16 thresholds, bit-packed leaf flags):
+
+  1. node-table bytes per layout and the reduction ratio vs f32;
+  2. fused-kernel latency per layout, sampled interleaved so host drift
+     can't masquerade as a layout effect (paired per-round ratios);
+  3. class-exactness of every quantized evaluation against the serial
+     reference (asserted, not tolerated);
+  4. the split-safe calibrated rounding stats (how many thresholds fit the
+     narrow dtype when a calibration set pins each node's routing interval).
+
+Every (workload, layout) pair lands as one flat entry carrying
+``median_ms``, so the perf history (`results/history/layout.jsonl`) tracks
+each layout as its own series and the CI perf gate watches them all.
+
+Acceptance (ISSUE 10): ≥4× byte reduction on the wide-forest workload and
+quantized latency no worse than the f32 fused kernel on at least one
+standard workload.
+
+    PYTHONPATH=src python -m benchmarks.layout_sweep
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_bench_json
+from repro.core import breadth_first_encode, random_tree
+from repro.core.forest import EncodedForest
+from repro.kernels.tree_eval.ops import PackedForest, forest_eval_fused, forest_eval_fused_q
+from repro.kernels.tree_eval.quant import THR_DTYPES, QuantizedForest
+from repro.kernels.tree_eval.ref import forest_eval_ref
+from repro.tune.measure import interleaved_samples
+
+# Same forest operating points as benchmarks/tune_sweep.py (same seeds, so
+# the latency columns are comparable across the two reports).  The wide
+# forest is the acceptance workload: many shallow trees maximise the
+# node-table share of the working set.
+WORKLOADS = [
+    # name, tree depths, M, A
+    ("forest_uniform_t8_d6", [6] * 8, 4096, 19),
+    ("forest_mixed_t8_d2-9", [2 + (i % 8) for i in range(8)], 4096, 19),
+    ("forest_wide_t32_d4", [4] * 32, 1024, 19),
+]
+
+# The ISSUE acceptance pins these two workload roles.
+WIDE_WORKLOAD = "forest_wide_t32_d4"
+NOISE_BAND = 1.05   # paired-ratio band for "no worse than f32 fused"
+
+
+def _build(name, depths, m, n_attrs):
+    trees = [
+        breadth_first_encode(
+            random_tree(n_attrs=n_attrs, n_classes=7, max_depth=d, min_depth=d,
+                        seed=100 + i, balance=1.0)
+        )
+        for i, d in enumerate(depths)
+    ]
+    forest = EncodedForest(trees)
+    rec = jnp.asarray(
+        np.random.default_rng(zlib.crc32(name.encode())).normal(size=(m, n_attrs)),
+        jnp.float32,
+    )
+    return forest, rec
+
+
+def _reference(rec, forest):
+    return np.asarray(forest_eval_ref(
+        rec,
+        jnp.asarray(forest.attr_idx, jnp.int32),
+        jnp.asarray(forest.threshold, jnp.float32),
+        jnp.asarray(forest.child, jnp.int32),
+        jnp.asarray(forest.class_val, jnp.int32),
+        max_depth=max(int(forest.max_depth), 1),
+    ))
+
+
+def sweep_one(name, depths, m, n_attrs, *, iters, warmup) -> list[dict]:
+    """One workload → flat per-layout entries (f32 baseline row first)."""
+    forest, rec = _build(name, depths, m, n_attrs)
+    ref = _reference(rec, forest)
+
+    packed = PackedForest(forest, n_attrs)
+    f32_bytes = int(packed.nbytes)
+    n_pad_nodes = forest.n_trees * int(packed.attr_idx.shape[-1])
+
+    quants: dict[str, QuantizedForest] = {
+        td: QuantizedForest(forest, n_attrs, thr_dtype=td) for td in THR_DTYPES
+    }
+    # Every quantized layout must be class-exact — no tolerance.  Universal
+    # mode guarantees it; this assert is the bench's conformance tripwire.
+    for td, qf in quants.items():
+        got = np.asarray(forest_eval_fused_q(rec, qf))
+        if not np.array_equal(got, ref):
+            raise AssertionError(f"{name}: quantized layout {td} diverged from ref")
+
+    fns = {"f32_fused": lambda: forest_eval_fused(
+        rec, packed, algorithm="speculative", jump_mode="gather")}
+    for td, qf in quants.items():
+        fns[f"quant_{td}"] = (lambda q: lambda: forest_eval_fused_q(rec, q))(qf)
+    samples = interleaved_samples(fns, warmup=warmup, iters=iters)
+    f32 = np.asarray(samples["f32_fused"])
+    f32_ms = float(np.median(f32))
+
+    base = {
+        "workload": name,
+        "t": forest.n_trees,
+        "m": int(rec.shape[0]),
+        "n_attrs": n_attrs,
+        "n_nodes": int(forest.n_nodes),
+    }
+    rows = [{
+        **base,
+        "variant": "f32_fused",
+        "median_ms": round(f32_ms, 6),
+        "mad_ms": round(float(np.median(np.abs(f32 - f32_ms))), 6),
+        "table_bytes": f32_bytes,
+        "bytes_per_node": round(f32_bytes / n_pad_nodes, 3),
+        "reduction_vs_f32": 1.0,
+        "ratio_vs_f32_fused": 1.0,
+        "not_worse_than_f32": True,
+        "thr_stored": "float32",
+        "fallback_nodes": 0,
+        "exact": True,
+    }]
+    for td, qf in quants.items():
+        q = np.asarray(samples[f"quant_{td}"])
+        q_ms = float(np.median(q))
+        ratio = float(np.median(q / f32))
+        rep = qf.bytes_report()
+        # Split-safe calibrated rounding on the same dtype: with the batch
+        # as calibration set, every node whose routing interval admits a
+        # narrow threshold stores it narrow; the rest keep exact f32.
+        qs = QuantizedForest(forest, n_attrs, thr_dtype=td,
+                             calibration=np.asarray(rec))
+        if not np.array_equal(np.asarray(forest_eval_fused_q(rec, qs)), ref):
+            raise AssertionError(f"{name}: split-safe {td} broke calibration routing")
+        srep = qs.bytes_report()
+        rows.append({
+            **base,
+            "variant": f"quant_{td}",
+            "median_ms": round(q_ms, 6),
+            "mad_ms": round(float(np.median(np.abs(q - q_ms))), 6),
+            "table_bytes": int(qf.nbytes),
+            "bytes_per_node": round(rep["bytes_per_node"], 3),
+            "reduction_vs_f32": round(f32_bytes / qf.nbytes, 2),
+            "ratio_vs_f32_fused": round(ratio, 4),
+            "not_worse_than_f32": bool(ratio <= NOISE_BAND),
+            "thr_stored": rep["thr_stored"],
+            "fallback_nodes": rep["fallback_nodes"],
+            "exact": True,
+            "split_safe_table_bytes": int(qs.nbytes),
+            "split_safe_thr_stored": srep["thr_stored"],
+            "split_safe_fallback_nodes": srep["fallback_nodes"],
+        })
+        print(f"  [{name}] quant_{td}: {qf.nbytes} B ({f32_bytes / qf.nbytes:.1f}x "
+              f"smaller), {q_ms:.3f} ms vs f32 {f32_ms:.3f} ms "
+              f"(paired ratio {ratio:.3f}), thresholds stored {rep['thr_stored']}, "
+              f"split-safe fallbacks {srep['fallback_nodes']}")
+    return rows
+
+
+def main(iters: int = 15, warmup: int = 2) -> dict:
+    entries: list[dict] = []
+    for name, depths, m, a in WORKLOADS:
+        entries.extend(sweep_one(name, depths, m, a, iters=iters, warmup=warmup))
+
+    wide_q = [e for e in entries
+              if e["workload"] == WIDE_WORKLOAD and e["variant"] != "f32_fused"]
+    best_wide_reduction = max(e["reduction_vs_f32"] for e in wide_q)
+    not_worse_somewhere = any(
+        e["not_worse_than_f32"] for e in entries if e["variant"] != "f32_fused"
+    )
+    summary = {
+        "wide_workload": WIDE_WORKLOAD,
+        "wide_forest_best_reduction": best_wide_reduction,
+        "meets_4x_reduction": bool(best_wide_reduction >= 4.0),
+        "quant_not_worse_somewhere": bool(not_worse_somewhere),
+        "noise_band": NOISE_BAND,
+        "all_exact": True,   # the asserts above would have raised otherwise
+    }
+    path = write_bench_json("layout", entries, summary=summary)
+    print(f"\nwide-forest best reduction x{best_wide_reduction:.1f} "
+          f"(acceptance >=4x: {'met' if summary['meets_4x_reduction'] else 'NOT MET'}); "
+          f"quant not worse than f32 fused somewhere: "
+          f"{'yes' if not_worse_somewhere else 'NO'}")
+    print(f"wrote {path}")
+    return {"entries": entries, "summary": summary, "path": str(path)}
+
+
+if __name__ == "__main__":
+    main()

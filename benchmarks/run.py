@@ -15,7 +15,7 @@ import time
 
 
 BENCHES = ["table1", "fig4", "analysis", "m_sweep", "geometry", "moe_router", "tune",
-           "cascade", "dist_sweep", "obs", "profile"]
+           "cascade", "dist_sweep", "obs", "profile", "layout"]
 
 
 def _run(name: str) -> None:
@@ -57,10 +57,13 @@ def _run(name: str) -> None:
     elif name == "profile":
         from benchmarks.profile_sweep import main
         main()
+    elif name == "layout":
+        from benchmarks.layout_sweep import main
+        main()
     else:
         raise SystemExit(f"unknown bench {name!r}; available: {BENCHES}")
     entries = common.drain_records()
-    if entries and name not in ("tune", "cascade", "dist_sweep", "obs", "profile"):  # richer reports
+    if entries and name not in ("tune", "cascade", "dist_sweep", "obs", "profile", "layout"):  # richer reports
         path = common.write_bench_json(name, entries)
         print(f"--- wrote {path}")
     print(f"--- {name} done in {time.perf_counter() - t0:.1f}s")

@@ -373,6 +373,61 @@ def render_profile(data: dict) -> str:
     return "\n".join(out)
 
 
+def render_layout(data: dict) -> str:
+    """BENCH_layout.json → quantized node-table layout report."""
+    out = ["## Quantized node-table layouts (`BENCH_layout.json`)", ""]
+    out.extend(_env_note(data))
+    out.append("The f32 fused tables (`PackedForest` — attr-select matrix + "
+               "full-width node columns) vs the compact `QuantizedForest` "
+               "SoA layouts (int8/int16 indices, bf16/f16 thresholds where "
+               "the cast is exact, bit-packed leaf flags).  Every quantized "
+               "run is asserted class-exact against the serial reference; "
+               "latency ratios are paired per-round medians (interleaved "
+               "sampling), so host drift divides out.")
+    out.append("")
+    out.append("| workload | T | M | layout | table bytes | B/node | reduction "
+               "| median ms | vs f32 fused | not worse | thr stored |")
+    out.append("|" + "---|" * 11)
+    for e in data.get("entries", []):
+        first = e["variant"] == "f32_fused"
+        head = (f"| {e['workload']} | {e['t']} | {e['m']} " if first
+                else "| | | ")
+        out.append(
+            head
+            + f"| {e['variant']} | {e['table_bytes']} "
+            f"| {e['bytes_per_node']} | {e['reduction_vs_f32']}x "
+            f"| {_ms(e['median_ms'])} | {e['ratio_vs_f32_fused']:.3f} "
+            f"| {'yes' if e['not_worse_than_f32'] else 'NO'} "
+            f"| {e['thr_stored']} |"
+        )
+    s = data.get("summary", {})
+    if s:
+        out.append("")
+        out.append(
+            f"Wide-forest best reduction **x{s.get('wide_forest_best_reduction', 0):.1f}** "
+            f"(acceptance ≥4×: {'met' if s.get('meets_4x_reduction') else 'NOT MET'}); "
+            f"quantized latency within the ±{(s.get('noise_band', 1.05) - 1) * 100:.0f}% "
+            f"band of f32 fused on at least one workload: "
+            f"{'yes' if s.get('quant_not_worse_somewhere') else 'NO'}."
+        )
+    ss_rows = [e for e in data.get("entries", [])
+               if "split_safe_table_bytes" in e]
+    if ss_rows:
+        out.append("")
+        out.append("Split-safe calibrated rounding (batch as calibration set — "
+                   "nodes whose routing interval admits a narrow threshold "
+                   "store it narrow, the rest keep exact f32):")
+        out.append("")
+        out.append("| workload | layout | table bytes | thr stored | fallback nodes |")
+        out.append("|" + "---|" * 5)
+        for e in ss_rows:
+            out.append(
+                f"| {e['workload']} | {e['variant']} | {e['split_safe_table_bytes']} "
+                f"| {e['split_safe_thr_stored']} | {e['split_safe_fallback_nodes']} |"
+            )
+    return "\n".join(out)
+
+
 def render_trajectory(history_dir: Path) -> str:
     """results/history/*.jsonl → per-workload trajectory deltas.
 
@@ -430,6 +485,7 @@ _RENDERERS = {
     "BENCH_dist.json": render_dist,
     "BENCH_obs.json": render_obs,
     "BENCH_profile.json": render_profile,
+    "BENCH_layout.json": render_layout,
 }
 
 

@@ -46,6 +46,26 @@ def _tree_arrays(enc: EncodedTree):
     )
 
 
+_F32_MAX = float(jnp.finfo(jnp.float32).max)
+
+
+def sanitize_records(records: jax.Array) -> jax.Array:
+    """Make a record batch safe for one-hot-matmul node evaluation.
+
+    The MXU formulation ``vals = records @ S`` multiplies every attribute by
+    0 or 1 and sums, so a single non-finite attribute poisons the whole row
+    (IEEE ``inf * 0 = NaN``).  Clamping preserves routing against every
+    finite threshold: NaN and -FLT_MAX both fail ``v > t`` for all reachable
+    thresholds, ±inf route exactly like ±FLT_MAX, and the leaf self-loop's
+    +inf threshold still rejects everything.  Gather-based evaluators don't
+    need this — they read only the addressed attribute.
+    """
+    records = jnp.asarray(records, jnp.float32)
+    return jnp.where(
+        jnp.isnan(records), -_F32_MAX, jnp.clip(records, -_F32_MAX, _F32_MAX)
+    )
+
+
 def speculative_node_eval(
     records: jax.Array,
     attr_idx: jax.Array,
@@ -67,6 +87,7 @@ def speculative_node_eval(
     same arithmetic.
     """
     if use_onehot_matmul:
+        records = sanitize_records(records)
         if attr_select is None:
             n_attrs = records.shape[-1]
             attr_select = jax.nn.one_hot(attr_idx, n_attrs, dtype=records.dtype).T

@@ -88,6 +88,7 @@ def eval_forest_tuned(
     autotune: bool = False,
     engines: tuple[str, ...] | None = None,
     families: tuple[str, ...] | None = None,
+    layouts: tuple[str, ...] | None = None,
 ) -> jax.Array:
     """Per-tree class assignments, shape (T, M), via forest-level dispatch.
 
@@ -99,12 +100,15 @@ def eval_forest_tuned(
     ``autotune=True`` the first sight of a bucket measures all three
     families and persists the winner.  Every family is exact, so the choice
     never changes results — bit-identical to evaluating each tree with
-    ``eval_serial``.
+    ``eval_serial``.  ``layouts=("f32", "quant")`` opts the compact
+    quantized node tables into the competition (still exact — dispatch only
+    builds universal-mode quantizations).
     """
     from repro.tune import ForestTunedEvaluator
 
     return ForestTunedEvaluator(
-        forest, cache=cache, autotune=autotune, engines=engines, families=families
+        forest, cache=cache, autotune=autotune, engines=engines,
+        families=families, layouts=layouts,
     )(jnp.asarray(records, jnp.float32))
 
 

@@ -103,6 +103,7 @@ class ShardedForestEvaluator:
         cache=None,
         autotune: bool = False,
         engines: tuple[str, ...] | None = None,
+        layouts: tuple[str, ...] | None = None,
         registry: obs.Registry | None = None,
         tracer: obs.Tracer | None = None,
         profiler=None,
@@ -113,6 +114,9 @@ class ShardedForestEvaluator:
         self.cache = cache if cache is not None else TuneCache()  # one handle, one disk read
         self.autotune = autotune
         self.engines = engines
+        # node-table layout opt-in, forwarded to the single-device
+        # ForestTunedEvaluator path (shard bodies stay on the f32 tables)
+        self.layouts = layouts
         self.obs = registry if registry is not None else obs.Registry()
         self.tracer = tracer if tracer is not None else obs.NULL_TRACER
         # a TraversalProfiler (serve engine's): measured per-bucket d_µ /
@@ -189,6 +193,7 @@ class ShardedForestEvaluator:
                 cache=self.cache,
                 autotune=self.autotune,
                 engines=self.engines,
+                layouts=self.layouts,
                 registry=self.obs,
                 tracer=self.tracer,
                 profiler=self.profiler,

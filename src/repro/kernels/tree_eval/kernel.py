@@ -462,6 +462,139 @@ def fused_votes_data_parallel_pallas(
     )(records, attr_idx, threshold, child, class_val)
 
 
+# ---------------------------------------------------------------------------
+# quantized fused kernels (compact SoA layouts, §4 memory optimizations)
+# ---------------------------------------------------------------------------
+#
+# Same grid as the f32 fused kernels — (M/block_m, T), trees innermost — but
+# the tables arrive at their quantized storage dtypes (int8/int16 indices,
+# bf16/f16/f32 thresholds) and there is **no attr_select matrix**: node
+# evaluation gathers each record's attribute directly,
+# ``vals[b, n] = rec[b, attr_idx[n]]``, which is what makes the quantized
+# node table 1–2 orders of magnitude smaller than the one-hot layout.  All
+# arithmetic upcasts at the register level (int → int32, float → f32), so
+# results are bit-identical to the f32 kernels running on the same
+# (possibly quantized) threshold values.
+
+
+def _quant_speculative_compute(
+    rec,        # (BM, A) f32
+    attr_idx,   # (1, N) int8/int16/int32
+    thr,        # (1, N) bf16/f16/f32
+    child,      # (1, N) int16/int32
+    class_val,  # (1, N) int8/int16/int32
+    *,
+    total_jumps: int,
+):
+    """Procedure 4/5 core on quantized tables; returns (BM, 1) int32."""
+    bm = rec.shape[0]
+    n = attr_idx.shape[-1]
+    idx = jnp.broadcast_to(attr_idx.astype(jnp.int32), (bm, n))
+    vals = jnp.take_along_axis(rec, idx, axis=1)              # (BM, N) gather
+    pred = (vals > thr.astype(jnp.float32)).astype(jnp.int32)
+    path = child.astype(jnp.int32) + pred                      # (BM, N)
+    for _ in range(total_jumps):
+        path = jnp.take_along_axis(path, path, axis=1)
+    return _lane_gather(class_val.astype(jnp.int32), path[:, 0:1])
+
+
+def _fused_speculative_q_body(
+    records_ref,      # (BM, A) VMEM — shared across the tree axis
+    attr_idx_ref,     # (1, N) VMEM (int8/int16)
+    threshold_ref,    # (1, N) VMEM (bf16/f16/f32)
+    child_ref,        # (1, N) VMEM (int16/int32)
+    class_val_ref,    # (1, N) VMEM (int8/int16)
+    out_ref,          # (1, BM, 1) VMEM
+    *,
+    total_jumps: int,
+):
+    out_ref[...] = _quant_speculative_compute(
+        records_ref[...].astype(jnp.float32),
+        attr_idx_ref[...],
+        threshold_ref[...],
+        child_ref[...],
+        class_val_ref[...],
+        total_jumps=total_jumps,
+    )[None]
+
+
+def _fused_data_parallel_q_body(
+    records_ref,      # (BM, A) VMEM
+    attr_idx_ref,     # (1, N) VMEM (int8/int16)
+    threshold_ref,    # (1, N) VMEM (bf16/f16/f32)
+    child_ref,        # (1, N) VMEM (int16/int32)
+    class_val_ref,    # (1, N) VMEM (int8/int16)
+    out_ref,          # (1, BM, 1)
+    *,
+    max_depth: int,
+):
+    out_ref[...] = _data_parallel_compute(
+        records_ref[...].astype(jnp.float32),
+        attr_idx_ref[...].astype(jnp.int32),
+        threshold_ref[...].astype(jnp.float32),
+        child_ref[...].astype(jnp.int32),
+        class_val_ref[...].astype(jnp.int32),
+        max_depth=max_depth,
+    )[None]
+
+
+def _fused_q_pallas(kernel, records, attr_idx, threshold, child, class_val,
+                    *, block_m, interpret):
+    """Shared launch plumbing for the quantized fused kernels."""
+    m, a = records.shape
+    t, n = threshold.shape
+    assert m % block_m == 0, (m, block_m)
+    grid = (m // block_m, t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, a), lambda i, j: (i, 0)),  # record tile resident
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),        # quant tables stream
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, 1), lambda i, j: (j, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, m, 1), jnp.int32),
+        interpret=interpret,
+    )(records, attr_idx, threshold, child, class_val)
+
+
+def fused_speculative_q_pallas(
+    records: jax.Array,    # (M, A) padded f32
+    attr_idx: jax.Array,   # (T, N) int8/int16
+    threshold: jax.Array,  # (T, N) bf16/f16/f32
+    child: jax.Array,      # (T, N) int16/int32
+    class_val: jax.Array,  # (T, N) int8/int16
+    *,
+    total_jumps: int,
+    block_m: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantized speculative launch over the whole forest. Returns (T, M, 1)."""
+    kernel = functools.partial(_fused_speculative_q_body, total_jumps=total_jumps)
+    return _fused_q_pallas(kernel, records, attr_idx, threshold, child, class_val,
+                           block_m=block_m, interpret=interpret)
+
+
+def fused_data_parallel_q_pallas(
+    records: jax.Array,    # (M, A) padded f32
+    attr_idx: jax.Array,   # (T, N) int8/int16
+    threshold: jax.Array,  # (T, N) bf16/f16/f32
+    child: jax.Array,      # (T, N) int16/int32
+    class_val: jax.Array,  # (T, N) int8/int16
+    *,
+    max_depth: int,
+    block_m: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantized data-parallel launch over the whole forest. Returns (T, M, 1)."""
+    kernel = functools.partial(_fused_data_parallel_q_body, max_depth=max_depth)
+    return _fused_q_pallas(kernel, records, attr_idx, threshold, child, class_val,
+                           block_m=block_m, interpret=interpret)
+
+
 def _fused_data_parallel_body(
     records_ref,      # (BM, A) VMEM
     attr_idx_ref,     # (1, N) VMEM (int32)

@@ -17,8 +17,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.eval_speculative import sanitize_records
 from repro.core.tree import EncodedTree, attr_select_matrix, pad_tree, tree_depth
 from repro.kernels.tree_eval import kernel as _k
+from repro.kernels.tree_eval.quant import QuantizedForest, packed_forest_nbytes
 
 LANE = 128          # TPU vector lane count / MXU edge
 SUBLANE = 8
@@ -162,6 +164,10 @@ def tree_eval(
     if block_m is None:
         block_m = choose_block_m(tree.n_nodes, tree.n_attrs_padded, jump_mode=jump_mode)
     records = jnp.asarray(records)
+    if algorithm == "speculative":
+        # The speculative kernel evaluates every node with a records@S matmul;
+        # non-finite attributes would poison whole rows (inf*0 = NaN).
+        records = sanitize_records(records)
     padded, m = _pad_records(records, block_m, tree.n_attrs_padded)
     jumps = max(1, math.ceil(math.log2(max(tree.max_depth, 2))))
     out = _tree_eval_padded(
@@ -225,6 +231,12 @@ class PackedForest:
         self.threshold = jnp.asarray(np.stack([p.threshold for p in penc]), jnp.float32)
         self.child = jnp.asarray(np.stack([p.child for p in penc]), jnp.int32)
         self.class_val = jnp.asarray(np.stack([p.class_val for p in penc]), jnp.int32)
+
+    @property
+    def nbytes(self) -> int:
+        """Total node-table bytes (incl. ``attr_select`` — the f32 baseline
+        the quantized layouts are benchmarked against)."""
+        return packed_forest_nbytes(self)
 
 
 @functools.partial(
@@ -308,6 +320,10 @@ def forest_eval_fused(
     if block_m is None:
         block_m = choose_block_m(forest.n_nodes, forest.n_attrs_padded, jump_mode=jump_mode)
     records = jnp.asarray(records)
+    if algorithm == "speculative":
+        # The fused speculative kernel evaluates every node with a per-tree
+        # records@S matmul; non-finite attributes poison rows (inf*0 = NaN).
+        records = sanitize_records(records)
     padded, m = _pad_records(records, block_m, forest.n_attrs_padded)
     jumps = max(1, math.ceil(math.log2(max(forest.max_depth, 2))))
     out = _forest_eval_padded(
@@ -320,6 +336,97 @@ def forest_eval_fused(
         algorithm=algorithm,
         block_m=block_m,
         jump_mode=jump_mode,
+        jumps=jumps,
+        max_depth=forest.max_depth,
+        interpret=interpret,
+    )
+    return out[:, :m]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("algorithm", "block_m", "jumps", "max_depth", "interpret"),
+)
+def _quant_forest_eval_padded(
+    records,
+    attr_idx,
+    threshold,
+    child,
+    class_val,
+    *,
+    algorithm: str,
+    block_m: int,
+    jumps: int,
+    max_depth: int,
+    interpret: bool,
+):
+    if algorithm == "speculative":
+        out = _k.fused_speculative_q_pallas(
+            records, attr_idx, threshold, child, class_val,
+            total_jumps=jumps, block_m=block_m, interpret=interpret,
+        )
+    elif algorithm == "data_parallel":
+        out = _k.fused_data_parallel_q_pallas(
+            records, attr_idx, threshold, child, class_val,
+            max_depth=max_depth, block_m=block_m, interpret=interpret,
+        )
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    return out[:, :, 0]
+
+
+def forest_eval_fused_q(
+    records,
+    forest: "QuantizedForest | object",
+    *,
+    n_attrs: int | None = None,
+    algorithm: str = "speculative",
+    thr_dtype: str = "bfloat16",
+    calibration=None,
+    block_m: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Evaluate a whole forest with one fused launch over *quantized* tables.
+
+    The compact-layout dual of :func:`forest_eval_fused`: node tables arrive
+    as int8/int16 indices and bf16/f16 split-safe thresholds (see
+    :mod:`repro.kernels.tree_eval.quant`) and node evaluation gathers each
+    record's attribute directly instead of multiplying by ``attr_select``.
+
+    Args:
+      records: (M, A) float array (compared in f32 after upcast).
+      forest: a prebuilt :class:`QuantizedForest`, or an ``EncodedForest``
+        quantized here (``thr_dtype``/``calibration`` control the rounding;
+        ``calibration=None`` — the default — quantizes only thresholds whose
+        cast round-trips exactly, so results are bit-exact for *any* input).
+      algorithm: "speculative" (Procedure 4/5) or "data_parallel" (Procedure 3).
+      block_m: records per tile; default = VMEM-model choice.
+      interpret: force Pallas interpret mode; default = auto (True off-TPU).
+
+    Returns:
+      (T, M) int32 per-tree class assignments.
+    """
+    if not isinstance(forest, QuantizedForest):
+        if n_attrs is None:
+            n_attrs = int(np.asarray(records).shape[-1])
+        forest = QuantizedForest(
+            forest, n_attrs, thr_dtype=thr_dtype, calibration=calibration
+        )
+    if interpret is None:
+        interpret = not on_tpu()
+    if block_m is None:
+        block_m = choose_block_m(forest.n_nodes, forest.n_attrs_padded, jump_mode="gather")
+    records = jnp.asarray(records)
+    padded, m = _pad_records(records, block_m, forest.n_attrs_padded)
+    jumps = max(1, math.ceil(math.log2(max(forest.max_depth, 2))))
+    out = _quant_forest_eval_padded(
+        padded,
+        forest.attr_idx,
+        forest.threshold,
+        forest.child,
+        forest.class_val,
+        algorithm=algorithm,
+        block_m=block_m,
         jumps=jumps,
         max_depth=forest.max_depth,
         interpret=interpret,
@@ -409,6 +516,9 @@ def forest_votes_fused(
         block_m = choose_block_m(forest.n_nodes, forest.n_attrs_padded, jump_mode=jump_mode)
     c_pad = _round_up(max(int(n_classes), 2), LANE)
     records = jnp.asarray(records)
+    if algorithm == "speculative":
+        # Same records@S contract as forest_eval_fused (inf*0 = NaN).
+        records = sanitize_records(records)
     padded, m = _pad_records(records, block_m, forest.n_attrs_padded)
     jumps = max(1, math.ceil(math.log2(max(forest.max_depth, 2))))
     out = _forest_votes_padded(
@@ -598,6 +708,12 @@ class ForestVariantSpec:
       jump_mode: "gather" | "onehot" node-evaluation/jump formulation.
       tunables: names of the free parameters, e.g. ("block_m",).
       fn: the evaluator callable (uniform signature above).
+      layout: node-table layout family — "f32" (the full-width
+        :class:`PackedForest` tables) or "quant" (the compact
+        :class:`QuantizedForest` SoA layout).  Quantized layouts only enter
+        the search space when a caller opts in
+        (``forest_search_space(..., layouts=...)``), and the ``thr_dtype``
+        tunable is consumed at *packing* time, not passed to the kernel.
     """
 
     name: str
@@ -607,6 +723,7 @@ class ForestVariantSpec:
     jump_mode: str
     tunables: tuple[str, ...]
     fn: Callable
+    layout: str = "f32"
 
 
 FOREST_VARIANTS: dict[str, ForestVariantSpec] = {}
@@ -693,6 +810,35 @@ def _fused_fn(algorithm: str, jump_mode: str) -> Callable:
         )
 
     return fn
+
+
+def _fused_q_fn(algorithm: str) -> Callable:
+    def fn(records, forest, *, max_depth=None, **params):
+        del max_depth  # QuantizedForest derives it from the encodings
+        return forest_eval_fused_q(
+            records,
+            forest,
+            algorithm=algorithm,
+            thr_dtype=params.get("thr_dtype", "bfloat16"),
+            block_m=params.get("block_m"),
+        )
+
+    return fn
+
+
+for _alg in ("speculative", "data_parallel"):
+    register_forest_variant(
+        ForestVariantSpec(
+            name=f"forest_fused_{_alg}_q",
+            family="fused",
+            algorithm=_alg,
+            engine="pallas",
+            jump_mode="gather",
+            tunables=("block_m", "thr_dtype"),
+            fn=_fused_q_fn(_alg),
+            layout="quant",
+        )
+    )
 
 
 for _alg, _jm in (("speculative", "gather"), ("speculative", "onehot"), ("data_parallel", "gather")):

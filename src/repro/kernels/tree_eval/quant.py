@@ -1,0 +1,400 @@
+"""Quantized struct-of-arrays forest layouts (the §4 memory-optimization analogue).
+
+The paper's CUDA wins came from shrinking and re-laying-out the node table so
+tree data stays resident close to the SIMD lanes (§4 texture/constant-memory
+optimizations).  :class:`repro.kernels.tree_eval.ops.PackedForest` carries
+full-width f32/int32 arrays — and, for the speculative kernel, a one-hot
+``attr_select`` matrix of A_pad·N_pad floats per tree that dwarfs the scalar
+tables.  :class:`QuantizedForest` is the compact dual: per-record attribute
+*gathers* replace the selection matmul (no ``attr_select`` at all), attribute
+indices shrink to int8/int16, child pointers to int16, classes to int8/int16,
+leaf flags bit-pack 8-to-a-byte, and thresholds drop to bf16/f16 under a
+**split-safe rounding rule** that provably never changes a routing decision.
+
+Split-safe rounding
+-------------------
+The branchless predicate is strict: ``next = child + (v > t)``.  Replacing
+``t`` with a low-precision ``t'`` is routing-preserving for a value ``v``
+exactly when ``(v > t') == (v > t)``.  Two regimes:
+
+* **universal** (``calibration=None``): ``t'`` must preserve the predicate
+  for *every possible* ``v`` — only exact round-trips qualify
+  (``f32(cast(t)) == t``); every other node keeps its exact f32 threshold.
+  The resulting layout is bit-exact for arbitrary inputs (including ±inf
+  and NaN attributes), which is what the tuner and dispatch paths build.
+* **split-safe** (``calibration=(M, A)`` records): per node, the observed
+  values of its attribute define a routing interval
+  ``v_lo = max{v : v <= t}``, ``v_hi = min{v : v > t}``; any representable
+  ``t'`` with ``v_lo <= t' < v_hi`` preserves every calibration record's
+  branch — including the paper's ``<=``/``>`` tie-break when a value sits
+  exactly on the split.  Nodes whose interval contains no representable
+  value fall back to exact f32 (counted in ``fallback_nodes``).
+
+When any node falls back the threshold table is stored as f32 — safe nodes
+still hold their quantized-then-upcast value so per-node routing is
+identical whichever storage dtype the forest ends up with — and ``nbytes``
+accounts the table at its *stored* width, never the requested one.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+from repro.core.tree import BOTTOM, EncodedTree, node_depths, pad_tree, tree_depth
+
+# Mirrors ops.LANE — quant.py stays import-free of ops (ops imports us).
+LANE = 128
+
+THR_DTYPES: dict[str, np.dtype] = {
+    "bfloat16": np.dtype(ml_dtypes.bfloat16),
+    "float16": np.dtype(np.float16),
+}
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# 16-bit float neighbours (shared IEEE-style bit layout of f16 and bf16)
+# ---------------------------------------------------------------------------
+
+
+def _ordered_from_bits(bits: np.ndarray) -> np.ndarray:
+    """Map 16-bit float bit patterns to integers monotone in float value."""
+    b = bits.astype(np.int64)
+    return np.where(b & 0x8000, 0x7FFF - (b & 0x7FFF), b + 0x8000)
+
+
+def _bits_from_ordered(keys: np.ndarray) -> np.ndarray:
+    k = np.asarray(keys, np.int64)
+    return np.where(k >= 0x8000, k - 0x8000, 0x8000 | (0x7FFF - k)).astype(np.uint16)
+
+
+def _neighbors(q: np.ndarray, dtype: np.dtype) -> tuple[np.ndarray, np.ndarray]:
+    """Element-wise (previous, next) representable values of ``q`` in ``dtype``.
+
+    Saturates at the ordered-key range ends, so ±inf's outward neighbour is
+    itself (never a NaN pattern).
+    """
+    keys = _ordered_from_bits(np.ascontiguousarray(q).view(np.uint16))
+    fin = _ordered_from_bits(
+        np.array([0x7C00 if dtype == np.float16 else 0x7F80], np.uint16))[0]
+    prev = _bits_from_ordered(np.clip(keys - 1, 0xFFFF - fin, fin)).view(dtype)
+    nxt = _bits_from_ordered(np.clip(keys + 1, 0xFFFF - fin, fin)).view(dtype)
+    return prev, nxt
+
+
+# ---------------------------------------------------------------------------
+# split-safe threshold quantization
+# ---------------------------------------------------------------------------
+
+
+def routing_interval(sorted_vals: np.ndarray, t: float) -> tuple[float, float]:
+    """The (v_lo, v_hi) routing interval of threshold ``t`` over observed values.
+
+    Any ``t'`` with ``v_lo <= t' < v_hi`` preserves ``v > t'`` for every
+    value in ``sorted_vals`` (finite, ascending).  Empty side → ∓inf.
+    """
+    i = int(np.searchsorted(sorted_vals, t, side="right"))
+    v_lo = float(sorted_vals[i - 1]) if i > 0 else -np.inf
+    v_hi = float(sorted_vals[i]) if i < len(sorted_vals) else np.inf
+    return v_lo, v_hi
+
+
+def quantize_thresholds(
+    threshold: np.ndarray,
+    leaf_mask: np.ndarray,
+    attr_idx: np.ndarray,
+    *,
+    thr_dtype: str = "bfloat16",
+    attr_values: dict[int, np.ndarray] | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Quantize one tree's thresholds under the split-safe rounding rule.
+
+    Args:
+      threshold/leaf_mask/attr_idx: the encoded tree's (N,) tables.
+      thr_dtype: "bfloat16" | "float16" target.
+      attr_values: {attr → sorted finite calibration values}; None selects
+        the universal regime (quantize only exact round-trips).
+
+    Returns:
+      (qthr, safe): the (N,) quantized table in ``thr_dtype`` and the
+      boolean mask of nodes whose quantized threshold is routing-safe.
+      Leaves (``+inf`` round-trips exactly) are always safe.
+    """
+    dt = THR_DTYPES[thr_dtype]
+    thr = np.asarray(threshold, np.float32)
+    leaf = np.asarray(leaf_mask, bool)
+    q = thr.astype(dt)
+    up = q.astype(np.float32)
+    if attr_values is None:
+        return q, leaf | (up == thr)
+    safe = leaf.copy()
+    prev, nxt = _neighbors(q, dt)
+    for i in np.nonzero(~leaf)[0]:
+        vals = attr_values.get(int(attr_idx[i]))
+        if vals is None or not len(vals):
+            safe[i] = True  # attribute never observed: any t' routes nothing
+            continue
+        v_lo, v_hi = routing_interval(vals, float(thr[i]))
+        t = float(thr[i])
+        # nearest-first candidate order; NaN/out-of-interval casts rejected
+        cands = sorted({q[i], prev[i], nxt[i]},
+                       key=lambda c: abs(float(np.float32(c)) - t))
+        for c in cands:
+            cu = float(np.float32(c))
+            if v_lo <= cu < v_hi:
+                q[i] = c
+                safe[i] = True
+                break
+    return q, safe
+
+
+# ---------------------------------------------------------------------------
+# bit-packed leaf flags
+# ---------------------------------------------------------------------------
+
+
+def pack_leaf_bits(leaf_mask: np.ndarray) -> np.ndarray:
+    """(N,) bool → (⌈N/8⌉,) uint8, LSB-first within each byte."""
+    return np.packbits(np.asarray(leaf_mask, bool), bitorder="little")
+
+
+def unpack_leaf_bits(bits: np.ndarray, n_nodes: int) -> np.ndarray:
+    """Inverse of :func:`pack_leaf_bits`."""
+    return np.unpackbits(np.asarray(bits, np.uint8), count=n_nodes,
+                         bitorder="little").astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# level-synchronous breadth-first renumbering
+# ---------------------------------------------------------------------------
+
+
+def level_sync_renumber(
+    enc: EncodedTree, *, lane: int = 1
+) -> tuple[EncodedTree, np.ndarray]:
+    """Renumber nodes level-contiguously, each level start ``lane``-aligned.
+
+    BFS encoding is already level-ordered; this makes the level boundaries
+    *addressable* — gaps introduced by the alignment are filled with phantom
+    self-loop leaves (class 0, unreachable), exactly like
+    :func:`repro.core.tree.pad_tree` — so a level-synchronous kernel can DMA
+    level ``l`` as the aligned slab ``[offsets[l], offsets[l+1])``.
+
+    Returns:
+      (renumbered tree, offsets): ``offsets`` has length ``levels + 1``;
+      ``offsets[-1]`` is the new node count.  With ``lane=1`` the
+      renumbering is the identity for a freshly BFS-encoded tree.
+    """
+    depth = node_depths(enc)
+    order = np.argsort(depth, kind="stable")  # stable: keeps BFS order per level
+    levels = depth[order]
+    n = enc.n_nodes
+    new_pos = np.empty((n,), np.int64)
+    offsets = []
+    pos = 0
+    for lvl in range(int(levels.max()) + 1 if n else 1):
+        pos = _round_up(pos, lane)
+        offsets.append(pos)
+        members = order[levels == lvl]
+        new_pos[members] = pos + np.arange(len(members))
+        pos += len(members)
+    n_new = _round_up(pos, lane)
+    offsets.append(n_new)
+
+    attr_idx = np.zeros((n_new,), np.int32)
+    threshold = np.full((n_new,), np.inf, np.float32)
+    child = np.arange(n_new, dtype=np.int32)  # phantoms self-loop
+    class_val = np.zeros((n_new,), np.int32)
+    leaf = enc.is_leaf_mask
+    for i in range(n):
+        p = int(new_pos[i])
+        attr_idx[p] = enc.attr_idx[i]
+        if leaf[i]:
+            class_val[p] = enc.class_val[i]
+        else:
+            c = int(enc.child[i])
+            assert new_pos[c + 1] == new_pos[c] + 1, "siblings split by renumber"
+            threshold[p] = enc.threshold[i]
+            child[p] = new_pos[c]
+            class_val[p] = BOTTOM
+    return EncodedTree(attr_idx, threshold, child, class_val), np.asarray(offsets, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# the quantized stacked-forest container
+# ---------------------------------------------------------------------------
+
+
+def _int_dtype(max_value: int) -> np.dtype:
+    if max_value <= np.iinfo(np.int8).max:
+        return np.dtype(np.int8)
+    if max_value <= np.iinfo(np.int16).max:
+        return np.dtype(np.int16)
+    return np.dtype(np.int32)
+
+
+def calibration_attr_values(calibration, n_attrs: int) -> dict[int, np.ndarray]:
+    """Per-attribute sorted finite value sets from an (M, A) calibration batch."""
+    cal = np.asarray(calibration, np.float32)
+    out = {}
+    for a in range(min(n_attrs, cal.shape[1])):
+        v = cal[:, a]
+        out[a] = np.sort(np.unique(v[np.isfinite(v)]))
+    return out
+
+
+class QuantizedForest:
+    """Compact device-ready stacked tables for the quantized fused kernels.
+
+    The quantized dual of :class:`repro.kernels.tree_eval.ops.PackedForest`:
+    same tree padding (phantom self-loop leaves to a lane-aligned common N)
+    and the same (T, N) stacking, but no ``attr_select`` matrix — the
+    quantized kernels gather each record's attribute directly — and every
+    table stored at the narrowest dtype that holds it:
+
+      ======================  =====================================
+      table                   dtype
+      ======================  =====================================
+      ``attr_idx``  (T, N)    int8 (A ≤ 128) else int16
+      ``threshold`` (T, N)    bf16/f16, f32 when any node falls back
+      ``child``     (T, N)    int16 (N ≤ 32768) else int32
+      ``class_val`` (T, N)    int8 (classes ≤ 127) else int16
+      ``leaf_bits`` (T, N/8)  uint8 bit-packed leaf flags
+      ======================  =====================================
+
+    Args:
+      forest: an ``EncodedForest`` (or anything exposing ``n_trees`` /
+        ``n_nodes`` / ``max_depth`` / ``tree(i)``).
+      n_attrs: record attribute count A (pre-padding).
+      thr_dtype: threshold target, "bfloat16" | "float16".
+      calibration: optional (M, A) records enabling split-safe threshold
+        rounding (see module docstring); None = universal (always-exact).
+      renumber: apply :func:`level_sync_renumber` per tree before packing
+        (``level_offsets`` records the per-tree level slabs).
+      max_depth: depth bound over the forest; default ``forest.max_depth``.
+    """
+
+    layout = "quant"
+
+    def __init__(
+        self,
+        forest,
+        n_attrs: int,
+        *,
+        thr_dtype: str = "bfloat16",
+        calibration=None,
+        renumber: bool = False,
+        max_depth: int | None = None,
+    ):
+        if thr_dtype not in THR_DTYPES:
+            raise ValueError(f"thr_dtype must be one of {sorted(THR_DTYPES)}")
+        self.n_trees = int(forest.n_trees)
+        self.n_attrs = int(n_attrs)
+        self.thr_dtype = thr_dtype
+        self.renumbered = bool(renumber)
+        trees = [forest.tree(i) for i in range(self.n_trees)]
+        self.level_offsets: list[np.ndarray] | None = None
+        if renumber:
+            pairs = [level_sync_renumber(t) for t in trees]
+            trees = [t for t, _ in pairs]
+            self.level_offsets = [off for _, off in pairs]
+        self.logical_nodes = max(t.n_nodes for t in trees)
+        self.max_depth = int(
+            max_depth if max_depth is not None else max(tree_depth(t) for t in trees)
+        )
+        n_pad = _round_up(self.logical_nodes, LANE)
+        a_pad = _round_up(self.n_attrs, LANE)
+        penc = [pad_tree(t, n_pad) for t in trees]
+        self.n_nodes = n_pad
+        self.n_attrs_padded = a_pad
+
+        attr_values = (
+            calibration_attr_values(calibration, self.n_attrs)
+            if calibration is not None else None
+        )
+        qthrs, safes = [], []
+        for p in penc:
+            q, safe = quantize_thresholds(
+                p.threshold, p.is_leaf_mask, p.attr_idx,
+                thr_dtype=thr_dtype, attr_values=attr_values,
+            )
+            qthrs.append(q)
+            safes.append(safe)
+        safe_all = np.stack(safes)
+        self.fallback_nodes = int((~safe_all).sum())
+        thr_f32 = np.stack([p.threshold for p in penc]).astype(np.float32)
+        if self.fallback_nodes:
+            # mixed storage: safe nodes keep their quantized-then-upcast
+            # value (routing identical to the pure-quantized table), tight
+            # nodes their exact f32 threshold
+            thr = np.where(safe_all, np.stack(qthrs).astype(np.float32), thr_f32)
+            self.thr_stored = "float32"
+        else:
+            thr = np.stack(qthrs)
+            self.thr_stored = thr_dtype
+
+        idx_dt = _int_dtype(max(self.n_attrs - 1, 1))
+        child_dt = _int_dtype(n_pad - 1)
+        cls_dt = _int_dtype(max(int(np.stack([p.class_val for p in penc]).max()), 1))
+        self.attr_idx = jnp.asarray(np.stack([p.attr_idx for p in penc]).astype(idx_dt))
+        self.threshold = jnp.asarray(thr)
+        self.child = jnp.asarray(np.stack([p.child for p in penc]).astype(child_dt))
+        self.class_val = jnp.asarray(
+            np.stack([p.class_val for p in penc]).astype(cls_dt))
+        self.leaf_bits = jnp.asarray(
+            np.stack([pack_leaf_bits(p.is_leaf_mask) for p in penc]))
+
+    @property
+    def nbytes(self) -> int:
+        """Total node-table bytes at *stored* widths (the honest footprint)."""
+        return sum(
+            int(x.size) * int(x.dtype.itemsize)
+            for x in (self.attr_idx, self.threshold, self.child,
+                      self.class_val, self.leaf_bits)
+        )
+
+    def bytes_report(self) -> dict:
+        """Per-table byte/dtype breakdown for benchmarks and gauges."""
+        tables = {
+            "attr_idx": self.attr_idx, "threshold": self.threshold,
+            "child": self.child, "class_val": self.class_val,
+            "leaf_bits": self.leaf_bits,
+        }
+        return {
+            "total_bytes": self.nbytes,
+            "bytes_per_node": self.nbytes / (self.n_trees * self.n_nodes),
+            "thr_requested": self.thr_dtype,
+            "thr_stored": self.thr_stored,
+            "fallback_nodes": self.fallback_nodes,
+            "tables": {
+                k: {"dtype": str(v.dtype), "bytes": int(v.size) * int(v.dtype.itemsize)}
+                for k, v in tables.items()
+            },
+        }
+
+
+def packed_forest_nbytes(pf) -> int:
+    """Node-table bytes of a :class:`ops.PackedForest` (incl. ``attr_select``)."""
+    return sum(
+        int(x.size) * int(x.dtype.itemsize)
+        for x in (pf.attr_select, pf.attr_idx, pf.threshold, pf.child, pf.class_val)
+    )
+
+
+def forest_table_bytes(target) -> int | None:
+    """Node-table bytes of whatever a forest variant actually runs against."""
+    nb = getattr(target, "nbytes", None)
+    if nb is not None:
+        return int(nb)
+    tables = [getattr(target, k, None)
+              for k in ("attr_idx", "threshold", "child", "class_val")]
+    if any(t is None for t in tables):
+        return None
+    if hasattr(target, "attr_select"):
+        tables.append(target.attr_select)
+    return sum(int(np.asarray(t).nbytes) for t in tables)

@@ -676,6 +676,7 @@ class ForestServeEngine:
     def __init__(self, forest, *, max_batch: int = 65536, chunk_records: int = 8192,
                  n_classes: Optional[int] = None, mesh=None, plan=None,
                  decomposition=None, cache=None, autotune: bool = False, engines=None,
+                 layouts=None,
                  retune: RetunePolicy | None = RetunePolicy(),
                  anytime: AnytimePolicy | None = None,
                  profile: "obs.ProfilePolicy | None" = obs.ProfilePolicy(),
@@ -711,7 +712,7 @@ class ForestServeEngine:
                 n_classes=n_classes, on_drift=_on_drift, engine="forest")
         self._eval = ShardedForestEvaluator(
             forest, mesh=mesh, plan=plan, decomposition=decomposition,
-            cache=cache, autotune=autotune, engines=engines,
+            cache=cache, autotune=autotune, engines=engines, layouts=layouts,
             registry=self.obs, tracer=self.tracer, profiler=self.profiler,
         )
         self._chunker = StreamingChunker(

@@ -29,7 +29,7 @@ from pathlib import Path
 from typing import Optional
 
 CACHE_ENV = "REPRO_TUNE_CACHE"
-CACHE_VERSION = 3  # v3: class-level (majority/cascade) winners join the table
+CACHE_VERSION = 4  # v4: quantized node-table layouts join the registry
 
 
 @functools.lru_cache(maxsize=1)
@@ -48,6 +48,7 @@ def registry_fingerprint() -> str:
     from repro.kernels.tree_eval import cascade as _cascade
     from repro.kernels.tree_eval import kernel as _kernel
     from repro.kernels.tree_eval import ops as _ops
+    from repro.kernels.tree_eval import quant as _quant
 
     h = hashlib.sha256()
     registries = [
@@ -63,6 +64,7 @@ def registry_fingerprint() -> str:
                 f"|{spec.algorithm}|{spec.engine}|{spec.jump_mode}|{spec.tunables}".encode()
             )
             h.update(f"|{getattr(spec, 'family', '')}".encode())
+            h.update(f"|{getattr(spec, 'layout', '')}".encode())
             fn = getattr(spec, "fn", None) or getattr(spec, "build", None)
             try:
                 h.update(inspect.getsource(fn).encode())
@@ -70,7 +72,7 @@ def registry_fingerprint() -> str:
                 h.update(repr(fn).encode())
     # the registered fns are thin wrappers: hash the modules the variants
     # actually lower through (Pallas kernels + the jnp evaluators)
-    for mod in (_ops, _kernel, _cascade, _spec, _dp):
+    for mod in (_ops, _kernel, _cascade, _spec, _dp, _quant):
         try:
             h.update(inspect.getsource(mod).encode())
         except (OSError, TypeError):

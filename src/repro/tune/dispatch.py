@@ -45,6 +45,7 @@ from repro.kernels.tree_eval.ops import (
     get_forest_variant,
     get_variant,
 )
+from repro.kernels.tree_eval.quant import QuantizedForest
 from repro.tune.cache import TuneCache, TuneEntry
 from repro.tune.heuristic import (
     cascade_heuristic_candidate,
@@ -383,6 +384,7 @@ class ForestTunedEvaluator:
         autotune: bool = False,
         engines: tuple[str, ...] | None = None,
         families: tuple[str, ...] | None = None,
+        layouts: tuple[str, ...] | None = None,
         measure_kw: dict | None = None,
         measure_d_mu: bool = True,
         d_mu_sample: int = 256,
@@ -402,6 +404,12 @@ class ForestTunedEvaluator:
         # measured d_µ and cascade survival replace the sample/prior fallbacks
         self.profiler = profiler
         self.families = families
+        # node-table layout opt-in: None ≡ ("f32",) — quantized layouts only
+        # compete (and quant cached winners are only honoured) when a caller
+        # passes layouts including "quant".  All quant layouts dispatch may
+        # build are universal-mode (exact for every input), so the opt-in is
+        # about footprint/latency trade-offs, never about correctness.
+        self.layouts = layouts
         self.measure_kw = dict(measure_kw or {})
         self.measure_d_mu = measure_d_mu
         self.d_mu_sample = d_mu_sample
@@ -415,6 +423,8 @@ class ForestTunedEvaluator:
         self._fast: dict[tuple[int, int], object] = {}   # (M, A) → runner
         self._per_tree: list[TunedEvaluator] | None = None
         self._packed: PackedForest | None = None
+        self._quant: QuantizedForest | None = None
+        self._quant_key: tuple | None = None   # (n_attrs, thr_dtype)
         self._swap_lock = threading.Lock()
         self._gen = 0
 
@@ -449,6 +459,18 @@ class ForestTunedEvaluator:
         if variant == PER_TREE_FAMILY:
             return PER_TREE_FAMILY in self.families
         return FOREST_VARIANTS[variant].family in self.families
+
+    def _layout_allowed(self, variant: str) -> bool:
+        """Whether a cached winner's node-table layout is within this
+        evaluator's ``layouts`` restriction — a default (f32-only) evaluator
+        must never run a quantized layout just because a layout-opted-in
+        sibling cached it, and vice versa."""
+        if variant == PER_TREE_FAMILY:
+            layout = "f32"
+        else:
+            layout = getattr(FOREST_VARIANTS[variant], "layout", "f32")
+        allowed = ("f32",) if self.layouts is None else self.layouts
+        return layout in allowed
 
     def _stamp_d_mu_provenance(self, key: str, entry: TuneEntry) -> None:
         """See :meth:`TunedEvaluator._stamp_d_mu_provenance`."""
@@ -489,6 +511,7 @@ class ForestTunedEvaluator:
             entry is not None
             and (entry.variant in FOREST_VARIANTS or entry.variant == PER_TREE_FAMILY)
             and self._family_allowed(entry.variant)
+            and self._layout_allowed(entry.variant)
         ):
             cand = Candidate.make(entry.variant, **entry.params)
         elif self.autotune:
@@ -500,10 +523,12 @@ class ForestTunedEvaluator:
                     cache=self.cache,
                     engines=self.engines,
                     families=self.families,
+                    layouts=self.layouts,
                     backend=backend,
                     autotune_trees=True,   # per-tree family priced at its tuned best
-                    store=self.families is None,  # a restricted winner must not
-                                                  # overwrite the bucket's one
+                    # a restricted (family- or layout-filtered) winner must
+                    # not overwrite the bucket's unrestricted one
+                    store=self.families is None and self.layouts is None,
                     registry=self._obs.registry,
                     **self.measure_kw,
                 )
@@ -572,7 +597,16 @@ class ForestTunedEvaluator:
             t=self.forest.n_trees, m=m, n_nodes=self.forest.n_nodes,
             n_attrs=a, depth_min=self.depth_min, depth_max=self.depth_max,
         ).bucket().m
-        if spec.family == "fused":
+        if getattr(spec, "layout", "f32") == "quant":
+            # Universal-mode quantization (no calibration): bit-exact for
+            # every input, so a quant winner never changes results.  The
+            # threshold dtype is part of the pack, so the memo keys on it.
+            qkey = (a, params.get("thr_dtype", "bfloat16"))
+            if self._quant is None or self._quant_key != qkey:
+                self._quant = QuantizedForest(self.forest, a, thr_dtype=qkey[1])
+                self._quant_key = qkey
+            target = self._quant
+        elif spec.family == "fused":
             if self._packed is None or self._packed.n_attrs != a:
                 self._packed = PackedForest(self.forest, a)
             target = self._packed

@@ -23,6 +23,7 @@ from repro.kernels.tree_eval.ops import (
     get_forest_variant,
     get_variant,
 )
+from repro.kernels.tree_eval.quant import QuantizedForest, forest_table_bytes
 from repro.tune.cache import TuneCache, TuneEntry
 from repro.tune.space import (
     Candidate,
@@ -45,6 +46,11 @@ class Measurement:
     # program (host-loop cascades) or lowering failed.  See
     # :func:`candidate_cost`.
     cost: dict | None = None
+    # Device-resident node-table bytes of the candidate's layout (the packed
+    # tables it keeps in HBM), or None for candidates without a packed
+    # target (per-tree family).  Sits next to the HLO-cost gauges so layout
+    # sweeps can weigh latency against footprint.
+    table_bytes: float | None = None
 
     @property
     def failed(self) -> bool:
@@ -135,6 +141,10 @@ def _note_measurements(registry, level: str, measurements) -> None:
         "tune.roofline_frac",
         "achieved fraction of the hardware roofline bound (see launch/roofline.py)",
         ("level", "variant"))
+    g_tbytes = r.gauge(
+        "tune.candidate_table_bytes",
+        "node-table bytes the candidate's layout keeps device-resident",
+        ("level", "variant"))
     for m in measurements:
         measured.labels(level=level).inc()
         if m.failed:
@@ -146,6 +156,8 @@ def _note_measurements(registry, level: str, measurements) -> None:
             g_flops.labels(level=level, variant=v).set(m.cost["flops"])
             g_bytes.labels(level=level, variant=v).set(m.cost["bytes"])
             g_roof.labels(level=level, variant=v).set(m.cost.get("roofline_frac", 0.0))
+        if m.table_bytes is not None:
+            g_tbytes.labels(level=level, variant=m.candidate.variant).set(m.table_bytes)
 
 
 def time_callable(fn, *, warmup: int = 2, iters: int = 5) -> tuple[float, ...]:
@@ -333,7 +345,11 @@ def _forest_candidate_fn(
     per-tree winners resolved — autotuned when ``autotune_trees``, pricing
     the per-tree family at its tuned best — and fused tables packed).
     Taking the batch as an argument keeps the same callable usable for
-    :func:`candidate_cost`, where a closed-over batch would constant-fold."""
+    :func:`candidate_cost`, where a closed-over batch would constant-fold.
+
+    Returns ``(fn, table_bytes)``: the callable plus the device-resident
+    node-table footprint of the candidate's packed layout (None when the
+    candidate has no single packed target, i.e. the per-tree family)."""
     if candidate.variant == PER_TREE_FAMILY:
         from repro.tune.dispatch import TunedEvaluator  # local: avoid cycle
 
@@ -347,11 +363,21 @@ def _forest_candidate_fn(
         # not happen under a tracer).
         for ev in evs:
             ev(rec)
-        return lambda r: jnp.stack([ev(r) for ev in evs])
+        return (lambda r: jnp.stack([ev(r) for ev in evs])), None
     spec = get_forest_variant(candidate.variant)
     params = candidate.param_dict
-    target = PackedForest(forest, rec.shape[1]) if spec.family == "fused" else forest
-    return lambda r: spec.fn(r, target, max_depth=depth, **params)
+    if getattr(spec, "layout", "f32") == "quant":
+        # Universal mode (no calibration): bit-exact for every input, so the
+        # tuner may hand this layout to dispatch without changing results.
+        target = QuantizedForest(
+            forest, rec.shape[1],
+            thr_dtype=params.get("thr_dtype", "bfloat16"))
+    elif spec.family == "fused":
+        target = PackedForest(forest, rec.shape[1])
+    else:
+        target = forest
+    tbytes = forest_table_bytes(target) if target is not forest else None
+    return (lambda r: spec.fn(r, target, max_depth=depth, **params)), tbytes
 
 
 def measure_forest_candidate(
@@ -383,7 +409,7 @@ def measure_forest_candidate(
     """
     depth = max(int(forest.max_depth), 1)
     try:
-        fn = _forest_candidate_fn(
+        fn, table_bytes = _forest_candidate_fn(
             candidate, records, forest, depth=depth, cache=cache, engines=engines,
             autotune_trees=autotune_trees,
             measure_kw={"warmup": warmup, "iters": iters},
@@ -393,7 +419,8 @@ def measure_forest_candidate(
         return Measurement(candidate, float("inf"), ())
     median = _median(samples)
     return Measurement(candidate, median, samples,
-                       candidate_cost(fn, records, median_ms=median))
+                       candidate_cost(fn, records, median_ms=median),
+                       table_bytes=table_bytes)
 
 
 def tune_forest_workload(
@@ -403,6 +430,7 @@ def tune_forest_workload(
     cache: TuneCache | None = None,
     engines: tuple[str, ...] | None = None,
     families: tuple[str, ...] | None = None,
+    layouts: tuple[str, ...] | None = None,
     warmup: int = 2,
     iters: int = 5,
     backend: str | None = None,
@@ -425,7 +453,9 @@ def tune_forest_workload(
       forest: the :class:`repro.core.forest.EncodedForest` to tune for.
       cache: winner store (also consulted by the ``per_tree`` family's
         per-tree resolutions).
-      engines/families: restrict the candidate enumeration.
+      engines/families/layouts: restrict the candidate enumeration
+        (``layouts`` defaults to the f32 tables; pass ``("f32", "quant")``
+        to let the compact :class:`QuantizedForest` candidates compete).
       warmup/iters/backend/verbose: as in :func:`tune_workload`.
       autotune_trees: give the ``per_tree`` family its tuned best (per-tree
         winners measured and persisted) rather than the heuristic choice.
@@ -447,7 +477,8 @@ def tune_forest_workload(
             c, rec, forest, cache=cache, engines=engines, warmup=warmup, iters=iters,
             autotune_trees=autotune_trees,
         )
-        for c in forest_search_space(shape, engines=engines, families=families)
+        for c in forest_search_space(
+            shape, engines=engines, families=families, layouts=layouts)
     ]
     _note_measurements(registry, "forest", measurements)
     ok = [m for m in measurements if not m.failed]

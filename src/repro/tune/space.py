@@ -52,6 +52,11 @@ from repro.kernels.tree_eval.ops import (
 # gather it replaces on every backend we model.
 MAX_ONEHOT_NODES = 2048
 
+# Threshold dtypes the quantized-layout candidates sweep.  The dtype is a
+# cache-identity parameter (consumed when the QuantizedForest packs), so
+# winners tuned at different node dtypes never collide in the cache.
+QUANT_THR_DTYPES = ("bfloat16", "float16")
+
 
 def _next_pow2(x: int) -> int:
     x = max(int(x), 1)
@@ -302,6 +307,7 @@ def forest_search_space(
     *,
     engines: tuple[str, ...] | None = None,
     families: tuple[str, ...] | None = None,
+    layouts: tuple[str, ...] | None = None,
 ) -> Iterator[Candidate]:
     """Enumerate every forest candidate valid for ``shape``.
 
@@ -316,21 +322,35 @@ def forest_search_space(
         the grid.
 
     ``families`` restricts the enumeration (the dist executor asks only for
-    the shared families — a shard body needs a single kern).
+    the shared families — a shard body needs a single kern).  ``layouts``
+    gates the node-table layouts: the default ``("f32",)`` keeps the
+    enumeration to the full-width tables; opting in with
+    ``("f32", "quant")`` adds the compact :class:`QuantizedForest`
+    candidates, crossed over :data:`QUANT_THR_DTYPES` (the threshold dtype
+    is part of the candidate — and therefore cache — identity).
     """
     engines = default_engines() if engines is None else tuple(engines)
     families = ("per_tree", "vmap", "fused") if families is None else tuple(families)
-    if PER_TREE_FAMILY in families:
+    layouts = ("f32",) if layouts is None else tuple(layouts)
+    if PER_TREE_FAMILY in families and "f32" in layouts:
         yield Candidate.make(PER_TREE_FAMILY)
     for spec in list_forest_variants():
         if (
             spec.family not in families
             or spec.engine not in engines
+            or getattr(spec, "layout", "f32") not in layouts
             or not forest_variant_valid(spec, shape)
         ):
             continue
         tshape = shape.tree_shape()
-        if "block_m" in spec.tunables:
+        if "thr_dtype" in spec.tunables:
+            for td in QUANT_THR_DTYPES:
+                if "block_m" in spec.tunables:
+                    for bm in _block_m_grid(tshape, spec.jump_mode):
+                        yield Candidate.make(spec.name, block_m=bm, thr_dtype=td)
+                else:
+                    yield Candidate.make(spec.name, thr_dtype=td)
+        elif "block_m" in spec.tunables:
             for bm in _block_m_grid(tshape, spec.jump_mode):
                 yield Candidate.make(spec.name, block_m=bm)
         elif "jumps_per_round" in spec.tunables:

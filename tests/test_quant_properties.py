@@ -1,0 +1,195 @@
+"""Property-based tests for the quantized forest layouts (ISSUE 10 satellite).
+
+Two properties pin the split-safe rounding contract:
+
+1. **Round-trip**: quantizing thresholds against a calibration set and
+   evaluating that same calibration set must reproduce the f32 routing
+   exactly — for every generated tree geometry, dtype, and calibration draw.
+2. **Tie-break**: records sitting *exactly on* a threshold take the left
+   branch (``v > t`` strict) on the f32 path, and must keep doing so on the
+   quantized path — the routing interval's ``v_lo <= t' < v_hi`` rule makes
+   equality land left on both.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+# hypothesis is optional: the shim runs a deterministic fixed-example sweep
+# when the real package is not installed (see hypothesis_compat.py).
+from hypothesis_compat import given, settings, st
+
+import jax.numpy as jnp
+
+from repro.core import breadth_first_encode, random_tree, tree_depth
+from repro.core.forest import EncodedForest
+from repro.kernels.tree_eval.ops import forest_eval_fused_q
+from repro.kernels.tree_eval.quant import (
+    THR_DTYPES,
+    QuantizedForest,
+    quantize_thresholds,
+    routing_interval,
+)
+from repro.kernels.tree_eval.ref import forest_eval_ref
+
+N_ATTRS = 5
+N_CLASSES = 4
+
+
+def _forest(seed: int, depth: int) -> EncodedForest:
+    trees = [
+        breadth_first_encode(
+            random_tree(
+                n_attrs=N_ATTRS, n_classes=N_CLASSES, max_depth=depth,
+                min_depth=min(depth, 2), seed=seed + i,
+            )
+        )
+        for i in range(3)
+    ]
+    return EncodedForest(trees)
+
+
+def _ref(forest: EncodedForest, rec) -> np.ndarray:
+    return np.asarray(
+        forest_eval_ref(
+            jnp.asarray(rec, jnp.float32),
+            jnp.asarray(forest.attr_idx, jnp.int32),
+            jnp.asarray(forest.threshold, jnp.float32),
+            jnp.asarray(forest.child, jnp.int32),
+            jnp.asarray(forest.class_val, jnp.int32),
+            max_depth=max(int(forest.max_depth), 1),
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# Property 1: split-safe round-trip preserves calibration routing
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    depth=st.integers(min_value=1, max_value=7),
+    thr_dtype=st.sampled_from(sorted(THR_DTYPES)),
+    scale=st.floats(min_value=0.05, max_value=50.0),
+)
+def test_split_safe_roundtrip_preserves_calibration_routing(
+    seed, depth, thr_dtype, scale
+):
+    forest = _forest(seed, depth)
+    rng = np.random.default_rng(seed)
+    # Scale stresses different bf16/f16 exponent ranges; include exact
+    # threshold hits so the calibration set exercises the tie-break interval.
+    cal = (rng.normal(size=(64, N_ATTRS)) * scale).astype(np.float32)
+    thr = np.unique(forest.threshold[np.isfinite(forest.threshold)])
+    if thr.size:
+        cal[: min(8, thr.size), 0] = thr[: min(8, thr.size)].astype(np.float32)
+    qf = QuantizedForest(forest, N_ATTRS, thr_dtype=thr_dtype, calibration=cal)
+    got = np.asarray(forest_eval_fused_q(jnp.asarray(cal), qf))
+    want = _ref(forest, cal)
+    assert np.array_equal(got, want), (
+        f"split-safe {thr_dtype} changed routing of its own calibration set "
+        f"(seed={seed}, depth={depth}, scale={scale})"
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    thr_dtype=st.sampled_from(sorted(THR_DTYPES)),
+)
+def test_quantized_interval_membership(seed, thr_dtype):
+    """Every quantized threshold lies inside its node's routing interval."""
+    enc = breadth_first_encode(
+        random_tree(n_attrs=N_ATTRS, n_classes=N_CLASSES, max_depth=5, seed=seed)
+    )
+    rng = np.random.default_rng(seed)
+    cal = rng.normal(size=(128, N_ATTRS)).astype(np.float32)
+    attr_values = {
+        a: np.sort(cal[:, a].astype(np.float64)) for a in range(N_ATTRS)
+    }
+    leaf = np.asarray(enc.is_leaf_mask, bool)
+    q, safe = quantize_thresholds(
+        np.asarray(enc.threshold, np.float32),
+        leaf,
+        np.asarray(enc.attr_idx, np.int32),
+        thr_dtype=thr_dtype,
+        attr_values=attr_values,
+    )
+    for n in range(enc.n_nodes):
+        if leaf[n]:
+            assert safe[n], "leaves (+inf self-loops) are always safe"
+            continue
+        t = float(enc.threshold[n])
+        tq = float(np.float32(q[n]))
+        v_lo, v_hi = routing_interval(attr_values[int(enc.attr_idx[n])], t)
+        if safe[n]:
+            assert v_lo <= tq < v_hi, (
+                f"node {n}: quantized threshold {tq} outside routing interval "
+                f"[{v_lo}, {v_hi}) of t={t}"
+            )
+        else:
+            # Unsafe means *no* narrow candidate fits the interval — the
+            # nearest cast certainly must not (otherwise it would be safe).
+            assert not (v_lo <= tq < v_hi), (
+                f"node {n}: cast {tq} fits [{v_lo}, {v_hi}) yet marked unsafe"
+            )
+
+
+# ---------------------------------------------------------------------------
+# Property 2: exact-hit records keep the strict `<=`/`>` tie-break
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    thr_dtype=st.sampled_from(sorted(THR_DTYPES)),
+)
+def test_tie_break_on_quantized_path(seed, thr_dtype):
+    forest = _forest(seed, 5)
+    # Build records that hit every threshold exactly: for each finite
+    # threshold t, a row with all attributes = t.  v > t is False on
+    # equality → strict left routing, on the f32 AND the quantized path.
+    thr = np.unique(forest.threshold[np.isfinite(forest.threshold)]).astype(
+        np.float32
+    )[:32]
+    rec = np.repeat(thr[:, None], N_ATTRS, axis=1)
+    want = _ref(forest, rec)
+
+    # Universal mode (no calibration): must be bit-exact for any input.
+    qf = QuantizedForest(forest, N_ATTRS, thr_dtype=thr_dtype)
+    got = np.asarray(forest_eval_fused_q(jnp.asarray(rec), qf))
+    assert np.array_equal(got, want), "universal quantization broke a tie-break"
+
+    # Split-safe mode calibrated on the tie rows themselves: the routing
+    # interval has v_lo == t, so t' >= t keeps equality routing left.
+    qs = QuantizedForest(forest, N_ATTRS, thr_dtype=thr_dtype, calibration=rec)
+    got_s = np.asarray(forest_eval_fused_q(jnp.asarray(rec), qs))
+    assert np.array_equal(got_s, want), "split-safe quantization broke a tie-break"
+
+
+@pytest.mark.parametrize("thr_dtype", sorted(THR_DTYPES))
+def test_tie_break_both_directions_single_split(thr_dtype):
+    """One split, records straddling + hitting it: left iff ``v <= t``."""
+    from repro.core import Node
+
+    t = 0.7281349  # not exactly representable in bf16 or f16
+    root = Node(
+        attr=0, threshold=t,
+        left=Node(class_val=0), right=Node(class_val=1),
+    )
+    forest = EncodedForest([breadth_first_encode(root)])
+    eps = float(np.finfo(np.float32).eps) * abs(t)
+    rec = np.zeros((3, N_ATTRS), np.float32)
+    rec[0, 0] = np.float32(t) - np.float32(eps)   # below → left
+    rec[1, 0] = np.float32(t)                     # exact hit → left (strict >)
+    rec[2, 0] = np.nextafter(np.float32(t), np.float32(np.inf))  # above → right
+    want = _ref(forest, rec)
+    assert want.tolist() == [[0, 0, 1]]
+    qs = QuantizedForest(forest, N_ATTRS, thr_dtype=thr_dtype, calibration=rec)
+    got = np.asarray(forest_eval_fused_q(jnp.asarray(rec), qs))
+    assert np.array_equal(got, want), (
+        f"{thr_dtype}: tie-break rows routed {got.tolist()} vs f32 {want.tolist()}"
+    )

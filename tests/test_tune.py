@@ -596,3 +596,129 @@ class TestWiring:
         for r in reqs:
             assert r.done
             assert np.array_equal(r.out, eval_serial(enc, r.records))
+
+
+# ---------------------------------------------------------------------------
+# Quantized layouts in the tuner (opt-in candidates, cache identity, refusal)
+# ---------------------------------------------------------------------------
+
+
+class TestQuantLayoutTuning:
+    SHAPE = ForestShape(t=4, m=256, n_nodes=31, n_attrs=19, depth_min=6, depth_max=6)
+
+    def _forest(self, seeds=(8, 9)):
+        trees = [breadth_first_encode(random_tree(n_attrs=7, n_classes=5,
+                                                  max_depth=4, seed=s))
+                 for s in seeds]
+        return EncodedForest(trees)
+
+    def test_quant_candidates_are_opt_in(self):
+        default = {c.variant for c in
+                   forest_search_space(self.SHAPE, engines=("pallas", "jnp"))}
+        assert not any(v.endswith("_q") for v in default)
+
+        cands = list(forest_search_space(self.SHAPE, engines=("pallas", "jnp"),
+                                         layouts=("f32", "quant")))
+        quant = [c for c in cands if c.variant.endswith("_q")]
+        assert quant, "layouts opt-in must add quantized candidates"
+        from repro.tune.space import QUANT_THR_DTYPES
+        for c in quant:
+            # thr_dtype is a cache-identity parameter: every quant candidate
+            # must carry one so different node dtypes never collide.
+            assert c.param_dict.get("thr_dtype") in QUANT_THR_DTYPES
+        # both dtypes are actually enumerated
+        assert {c.param_dict["thr_dtype"] for c in quant} == set(QUANT_THR_DTYPES)
+
+        only_quant = {c.variant for c in
+                      forest_search_space(self.SHAPE, engines=("pallas", "jnp"),
+                                          layouts=("quant",))}
+        assert only_quant and all(v.endswith("_q") for v in only_quant)
+        assert PER_TREE_FAMILY not in only_quant  # per-tree rides on f32 tables
+
+    def test_thr_dtype_is_candidate_identity(self):
+        a = Candidate.make("forest_fused_speculative_q", block_m=256,
+                           thr_dtype="bfloat16")
+        b = Candidate.make("forest_fused_speculative_q", block_m=256,
+                           thr_dtype="float16")
+        assert a != b and hash(a) != hash(b)
+        # and the dtype survives a cache round-trip inside the params blob
+        assert a.param_dict["thr_dtype"] == "bfloat16"
+
+    def test_thr_dtype_round_trips_through_cache(self, tmp_path):
+        cache = TuneCache(tmp_path / "c.json")
+        cache.store("k", TuneEntry(variant="forest_fused_speculative_q",
+                                   params={"block_m": 256, "thr_dtype": "float16"},
+                                   median_ms=0.5))
+        hit = TuneCache(tmp_path / "c.json").lookup("k")
+        assert hit.params == {"block_m": 256, "thr_dtype": "float16"}
+
+    def test_default_evaluator_refuses_cached_quant_winner(self, tmp_path):
+        """layouts=None means f32-only: a quant winner cached by an opted-in
+        sibling must not be replayed by a default evaluator."""
+        forest = self._forest()
+        rec = _records(64, 7, seed=45)
+        cache = TuneCache(tmp_path / "c.json")
+        ev = ForestTunedEvaluator(forest, cache=cache)
+        cache.store(ev.shape_of(rec).key(),
+                    TuneEntry(variant="forest_fused_data_parallel_q",
+                              params={"block_m": 256, "thr_dtype": "bfloat16"},
+                              median_ms=0.01))
+        cand, source = ev.resolve(rec)
+        assert source == "heuristic"            # quant hit refused
+        assert not cand.variant.endswith("_q")
+        # an evaluator that opted into quant layouts does take the hit
+        opted = ForestTunedEvaluator(forest, cache=cache,
+                                     layouts=("f32", "quant"))
+        cand, source = opted.resolve(rec)
+        assert source == "cache"
+        assert cand.variant == "forest_fused_data_parallel_q"
+        # and its replay stays bit-exact
+        ref = np.stack([eval_serial(forest.tree(i), rec) for i in range(2)])
+        assert np.array_equal(np.asarray(opted(rec)), ref)
+
+    def test_layout_restricted_winner_not_stored(self, tmp_path):
+        """A layout-filtered autotune winner must not overwrite the bucket's
+        unrestricted entry (same rule as family restriction)."""
+        forest = self._forest(seeds=(10, 11))
+        rec = _records(64, 7, seed=46)
+        cache = TuneCache(tmp_path / "c.json")
+        ev = ForestTunedEvaluator(forest, cache=cache, autotune=True,
+                                  layouts=("quant",),
+                                  engines=("pallas", "jnp"),  # quant is pallas-only
+                                  measure_kw={"warmup": 1, "iters": 2})
+        ref = np.stack([eval_serial(forest.tree(i), rec) for i in range(2)])
+        assert np.array_equal(np.asarray(ev(rec)), ref)
+        assert cache.lookup(ev.shape_of(rec).key()) is None
+
+    def test_stale_version_quant_winner_discarded(self, tmp_path):
+        """A CACHE_VERSION bump orphans stored winners — the medians priced
+        node tables that predate the quantized registry."""
+        from repro.tune.cache import CACHE_VERSION
+
+        path = tmp_path / "c.json"
+        path.write_text(json.dumps({
+            "version": CACHE_VERSION - 1,
+            "registry": registry_fingerprint(),
+            "entries": {"k": {"variant": "forest_fused_speculative_q",
+                              "params": {"thr_dtype": "bfloat16"},
+                              "median_ms": 0.1}},
+        }))
+        assert TuneCache(path).lookup("k") is None
+
+    def test_fingerprint_covers_layout(self):
+        """The live fingerprint must change if a spec's layout tag changes:
+        stored winners priced a registry where that name meant other tables."""
+        import dataclasses as _dc
+
+        spec = FOREST_VARIANTS["forest_fused_speculative_q"]
+        assert spec.layout == "quant"
+        registry_fingerprint.cache_clear()   # fingerprint is memoised
+        fp = registry_fingerprint()
+        FOREST_VARIANTS["forest_fused_speculative_q"] = _dc.replace(spec, layout="f32")
+        registry_fingerprint.cache_clear()
+        try:
+            assert registry_fingerprint() != fp
+        finally:
+            FOREST_VARIANTS["forest_fused_speculative_q"] = spec
+            registry_fingerprint.cache_clear()
+        assert registry_fingerprint() == fp
